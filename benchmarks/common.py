@@ -1,0 +1,24 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+from typing import Iterable, List, Tuple
+
+from repro.core.protocol import (AxleConfig, Protocol, SchedPolicy,
+                                 POLL_P1, POLL_P10, POLL_P100)
+from repro.core.simulator import simulate
+from repro.core.workloads import WORKLOADS
+
+Row = Tuple[str, float, str]     # (name, us_per_call, derived)
+
+
+def axle_cfg(pf: float = POLL_P1, **kw) -> AxleConfig:
+    return AxleConfig(poll_interval_ns=pf, **kw)
+
+
+def us(ns: float) -> float:
+    return ns / 1000.0
+
+
+def print_rows(rows: Iterable[Row]) -> None:
+    for name, t, derived in rows:
+        print(f"{name},{t:.2f},{derived}")

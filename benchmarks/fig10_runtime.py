@@ -1,0 +1,45 @@
+"""Fig. 10: normalized end-to-end runtime — RP, BS, AXLE_Interrupt, and
+AXLE at polling factors p1 (50 ns), p10 (500 ns), p100 (5 µs)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, axle_cfg, print_rows, us
+from repro.core.protocol import Protocol, POLL_P1, POLL_P10, POLL_P100
+from repro.core.simulator import simulate
+from repro.core.workloads import WORKLOADS
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    reductions_rp, reductions_bs = {}, {}
+    for key, wl in sorted(WORKLOADS.items()):
+        rp = simulate(wl, Protocol.RP)
+        bs = simulate(wl, Protocol.BS)
+        intr = simulate(wl, Protocol.AXLE_INTERRUPT, cfg=axle_cfg(POLL_P10))
+        base = rp.runtime_ns
+        rows.append((f"fig10.{key}.RP", us(rp.runtime_ns), "ratio=1.000"))
+        rows.append((f"fig10.{key}.BS", us(bs.runtime_ns),
+                     f"ratio={bs.runtime_ns / base:.4f}"))
+        rows.append((f"fig10.{key}.AXLE_Interrupt", us(intr.runtime_ns),
+                     f"ratio={intr.runtime_ns / base:.4f}"))
+        for tag, pf in (("p1", POLL_P1), ("p10", POLL_P10),
+                        ("p100", POLL_P100)):
+            ax = simulate(wl, Protocol.AXLE, cfg=axle_cfg(pf))
+            rows.append((f"fig10.{key}.AXLE_{tag}", us(ax.runtime_ns),
+                         f"ratio={ax.runtime_ns / base:.4f}"))
+            if tag == "p1":
+                reductions_rp[key] = 1 - ax.runtime_ns / rp.runtime_ns
+                reductions_bs[key] = 1 - ax.runtime_ns / bs.runtime_ns
+    n = len(reductions_rp)
+    rows.append(("fig10.j.avg_reduction_vs_RP_p1",
+                 0.0, f"value={sum(reductions_rp.values()) / n:.4f}"))
+    rows.append(("fig10.j.avg_reduction_vs_BS_p1",
+                 0.0, f"value={sum(reductions_bs.values()) / n:.4f}"))
+    rows.append(("fig10.j.max_reduction_vs_RP_p1",
+                 0.0, f"value={max(reductions_rp.values()):.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

@@ -1,0 +1,37 @@
+"""Fig. 11: the LLM case under reduced hardware — CCM units 16→8 (the
+paper reduces its 32-subcore config to 8; our Table-III CCM has 16 PUs)
+and host units 32→4.  With fewer host units the host tasks can no longer
+all run concurrently, so AXLE's overlap becomes effective (75.99% @ p10)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from benchmarks.common import Row, axle_cfg, print_rows, us
+from repro.core.protocol import (HardwareConfig, Protocol, POLL_P10,
+                                 DEFAULT_HW)
+from repro.core.simulator import simulate
+from repro.core.workloads import WORKLOADS
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    wl = WORKLOADS["h"]
+    for tag, hw in (
+            ("default", DEFAULT_HW),
+            ("reduced", dataclasses.replace(DEFAULT_HW, ccm_units=8,
+                                            host_units=4))):
+        rp = simulate(wl, Protocol.RP, hw)
+        bs = simulate(wl, Protocol.BS, hw)
+        ax = simulate(wl, Protocol.AXLE, hw, axle_cfg(POLL_P10))
+        base = rp.runtime_ns
+        rows.append((f"fig11.h.{tag}.RP", us(rp.runtime_ns), "ratio=1.000"))
+        rows.append((f"fig11.h.{tag}.BS", us(bs.runtime_ns),
+                     f"ratio={bs.runtime_ns / base:.4f}"))
+        rows.append((f"fig11.h.{tag}.AXLE_p10", us(ax.runtime_ns),
+                     f"ratio={ax.runtime_ns / base:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

@@ -1,0 +1,44 @@
+"""Fig. 12: CCM and host idle-time ratios under RP, BS, AXLE (p10), plus
+the paper's average reduction factors (13.99×/14.53× CCM, 3.93×/3.85×
+host)."""
+from __future__ import annotations
+
+import statistics
+from typing import List
+
+from benchmarks.common import Row, axle_cfg, print_rows, us
+from repro.core.protocol import Protocol, POLL_P10
+from repro.core.simulator import simulate
+from repro.core.workloads import WORKLOADS
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    f_ccm_rp, f_ccm_bs, f_host_rp, f_host_bs = [], [], [], []
+    for key, wl in sorted(WORKLOADS.items()):
+        rp = simulate(wl, Protocol.RP)
+        bs = simulate(wl, Protocol.BS)
+        ax = simulate(wl, Protocol.AXLE, cfg=axle_cfg(POLL_P10))
+        for tag, r in (("RP", rp), ("BS", bs), ("AXLE_p10", ax)):
+            rows.append((f"fig12.{key}.{tag}", us(r.runtime_ns),
+                         f"ccm_idle={r.ccm_idle_ratio:.4f};"
+                         f"host_idle={r.host_idle_ratio:.4f}"))
+        if ax.ccm_idle_ns > 0:
+            f_ccm_rp.append(rp.ccm_idle_ns / ax.ccm_idle_ns)
+            f_ccm_bs.append(bs.ccm_idle_ns / ax.ccm_idle_ns)
+        if ax.host_idle_ns > 0:
+            f_host_rp.append(rp.host_idle_ns / ax.host_idle_ns)
+            f_host_bs.append(bs.host_idle_ns / ax.host_idle_ns)
+    rows.append(("fig12.avg_ccm_idle_reduction_vs_RP", 0.0,
+                 f"value={statistics.mean(f_ccm_rp):.2f}x"))
+    rows.append(("fig12.avg_ccm_idle_reduction_vs_BS", 0.0,
+                 f"value={statistics.mean(f_ccm_bs):.2f}x"))
+    rows.append(("fig12.avg_host_idle_reduction_vs_RP", 0.0,
+                 f"value={statistics.mean(f_host_rp):.2f}x"))
+    rows.append(("fig12.avg_host_idle_reduction_vs_BS", 0.0,
+                 f"value={statistics.mean(f_host_bs):.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

@@ -1,0 +1,34 @@
+"""Fig. 13: host core stall time (fraction of end-to-end runtime spent on
+CXL/local memory operations of the offload interaction) for RP, BS, and
+AXLE at p10 / p100.  Paper: up to 6× reduction; single-digit % at p100."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, axle_cfg, print_rows, us
+from repro.core.protocol import Protocol, POLL_P10, POLL_P100
+from repro.core.simulator import simulate
+from repro.core.workloads import WORKLOADS
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    best = 0.0
+    for key, wl in sorted(WORKLOADS.items()):
+        rp = simulate(wl, Protocol.RP)
+        bs = simulate(wl, Protocol.BS)
+        ax10 = simulate(wl, Protocol.AXLE, cfg=axle_cfg(POLL_P10))
+        ax100 = simulate(wl, Protocol.AXLE, cfg=axle_cfg(POLL_P100))
+        for tag, r in (("RP", rp), ("BS", bs), ("AXLE_p10", ax10),
+                       ("AXLE_p100", ax100)):
+            rows.append((f"fig13.{key}.{tag}", us(r.runtime_ns),
+                         f"stall_ratio={r.host_stall_ratio:.4f}"))
+        if ax10.host_stall_ratio > 0:
+            best = max(best, bs.host_stall_ratio / ax10.host_stall_ratio)
+    rows.append(("fig13.max_stall_reduction_vs_BS_p10", 0.0,
+                 f"value={best:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

@@ -1,0 +1,64 @@
+"""Fig. 14: streaming-factor sweep.  SFX = 32·X-byte trigger; SF_Y% = one
+DMA batch carries Y% of the total per-iteration intermediate result."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from benchmarks.common import Row, axle_cfg, print_rows, us
+from repro.core.protocol import Protocol, POLL_P1
+from repro.core.simulator import simulate
+from repro.core.workloads import WORKLOADS
+
+
+def run_adaptive():
+    """Beyond paper (§V-E hint): AIMD adaptive streaming factor vs the
+    best static SF found by the sweep."""
+    from repro.core.simulator import AxleSimulator
+    rows = []
+    for key in ("c", "d", "i", "a"):
+        wl = WORKLOADS[key]
+        static = {}
+        for x in (1, 2, 4, 16, 64):
+            r = simulate(wl, Protocol.AXLE,
+                         cfg=axle_cfg(POLL_P1, streaming_factor_bytes=32 * x))
+            static[f"SF{x}"] = r.runtime_ns
+        best_tag, best = min(static.items(), key=lambda kv: kv[1])
+        ad = AxleSimulator(wl, cfg=axle_cfg(POLL_P1),
+                           adaptive_sf=True).run()
+        rows.append((f"fig14.{key}.SF_adaptive", us(ad.runtime_ns),
+                     f"vs_best_static={ad.runtime_ns / best:.4f};"
+                     f"best_static={best_tag}"))
+    return rows
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for key in ("c", "d", "i"):
+        wl = WORKLOADS[key]
+        base = simulate(wl, Protocol.AXLE,
+                        cfg=axle_cfg(POLL_P1, streaming_factor_bytes=32))
+        rows.append((f"fig14.{key}.SF1", us(base.runtime_ns), "ratio=1.000"))
+        for x in (2, 4, 16, 64):
+            r = simulate(wl, Protocol.AXLE,
+                         cfg=axle_cfg(POLL_P1,
+                                      streaming_factor_bytes=32 * x))
+            rows.append((f"fig14.{key}.SF{x}", us(r.runtime_ns),
+                         f"ratio={r.runtime_ns / base.runtime_ns:.4f}"))
+        for pct in (25, 50, 100):
+            sf = max(32, int(wl.iter_result_bytes * pct / 100))
+            r = simulate(wl, Protocol.AXLE,
+                         cfg=axle_cfg(POLL_P1, streaming_factor_bytes=sf))
+            rows.append((f"fig14.{key}.SF_{pct}%", us(r.runtime_ns),
+                         f"ratio={r.runtime_ns / base.runtime_ns:.4f}"))
+        rp = simulate(wl, Protocol.RP)
+        bs = simulate(wl, Protocol.BS)
+        rows.append((f"fig14.{key}.RP", us(rp.runtime_ns),
+                     f"ratio={rp.runtime_ns / base.runtime_ns:.4f}"))
+        rows.append((f"fig14.{key}.BS", us(bs.runtime_ns),
+                     f"ratio={bs.runtime_ns / base.runtime_ns:.4f}"))
+    rows.extend(run_adaptive())
+    return rows
+
+if __name__ == "__main__":
+    print_rows(run())

@@ -1,0 +1,34 @@
+"""Fig. 15: OoO-streaming ablation under RR and FIFO scheduling (both
+sides).  Paper: disabling OoO under RR costs 1.74× (d), 1.38× (e),
+1.41× (i); under FIFO it is ~neutral."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, axle_cfg, print_rows, us
+from repro.core.protocol import Protocol, SchedPolicy, POLL_P1
+from repro.core.simulator import simulate
+from repro.core.workloads import WORKLOADS
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for key in ("d", "e", "i", "a"):
+        wl = WORKLOADS[key]
+        for sched in (SchedPolicy.RR, SchedPolicy.FIFO):
+            on = simulate(wl, Protocol.AXLE,
+                          cfg=axle_cfg(POLL_P1, sched=sched,
+                                       ooo_streaming=True))
+            off = simulate(wl, Protocol.AXLE,
+                           cfg=axle_cfg(POLL_P1, sched=sched,
+                                        ooo_streaming=False))
+            rows.append((f"fig15.{key}.{sched.name}.OoO_on",
+                         us(on.runtime_ns), "ratio=1.000"))
+            rows.append((f"fig15.{key}.{sched.name}.OoO_off",
+                         us(off.runtime_ns),
+                         f"ratio={off.runtime_ns / on.runtime_ns:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

@@ -1,0 +1,33 @@
+"""Fig. 5 + Fig. 7 (motivation): component breakdown (CCM / data movement /
+host) and the two idle times for KNN and graph analytics under RP and BS."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, print_rows, us
+from repro.core.protocol import Protocol, DEFAULT_HW
+from repro.core.simulator import simulate
+from repro.core.workloads import WORKLOADS
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for key in ("a", "b", "c", "d", "e"):
+        wl = WORKLOADS[key]
+        for proto in (Protocol.RP, Protocol.BS):
+            r = simulate(wl, proto)
+            t_d = wl.n_iters * wl.iter_result_bytes / DEFAULT_HW.cxl_link_bw
+            rows.append((
+                f"fig5.{key}.{proto.name}", us(r.runtime_ns),
+                f"ccm={r.ccm_busy_ns / r.runtime_ns:.3f};"
+                f"dm={t_d / r.runtime_ns:.3f};"
+                f"host={r.host_busy_ns / r.runtime_ns:.3f}"))
+            rows.append((
+                f"fig7.{key}.{proto.name}", us(r.runtime_ns),
+                f"ccm_idle={r.ccm_idle_ratio:.3f};"
+                f"host_idle={r.host_idle_ratio:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

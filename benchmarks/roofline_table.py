@@ -1,0 +1,43 @@
+"""Roofline table: renders dryrun_report.json (launch/dryrun.py output)
+as the assignment's per-(arch × shape × mesh) roofline rows."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List
+
+from benchmarks.common import Row, print_rows
+
+REPORT = os.environ.get("DRYRUN_REPORT", "dryrun_report.json")
+
+
+def run(report_path: str = REPORT) -> List[Row]:
+    if not os.path.exists(report_path):
+        return [("roofline.missing", 0.0,
+                 f"report_not_found={report_path};run=repro.launch.dryrun")]
+    with open(report_path) as f:
+        rows_in = json.load(f)
+    out: List[Row] = []
+    for r in rows_in:
+        name = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+        if r.get("status") == "skipped":
+            out.append((name, 0.0, "skipped"))
+            continue
+        if r.get("status") != "ok" or "roofline" not in r:
+            out.append((name, 0.0, f"status={r.get('status')}"))
+            continue
+        t = r["roofline"]
+        bound = max(t["t_compute_s"], t["t_memory_s"], t["t_collective_s"])
+        out.append((
+            name, bound * 1e6,
+            f"dominant={t['dominant']};"
+            f"t_comp={t['t_compute_s']:.4g};t_mem={t['t_memory_s']:.4g};"
+            f"t_coll={t['t_collective_s']:.4g};"
+            f"useful={t['useful_ratio']:.3f};"
+            f"roofline_frac={t['roofline_fraction']:.4f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print_rows(run(sys.argv[1] if len(sys.argv) > 1 else REPORT))

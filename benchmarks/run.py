@@ -1,0 +1,47 @@
+"""Benchmark aggregator: one module per paper figure/table + the TPU
+back-streaming microbench and the roofline table.  Prints
+``name,us_per_call,derived`` CSV rows (assignment deliverable (d))."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (fig5_motivation, fig10_runtime, fig11_llm_hw,
+                        fig12_idle, fig13_stall, fig14_sf, fig15_ooo,
+                        fig16_flowctl, roofline_table, tpu_backstream)
+from benchmarks.common import print_rows
+
+MODULES = (
+    ("fig5_motivation", fig5_motivation),
+    ("fig10_runtime", fig10_runtime),
+    ("fig11_llm_hw", fig11_llm_hw),
+    ("fig12_idle", fig12_idle),
+    ("fig13_stall", fig13_stall),
+    ("fig14_sf", fig14_sf),
+    ("fig15_ooo", fig15_ooo),
+    ("fig16_flowctl", fig16_flowctl),
+    ("tpu_backstream", tpu_backstream),
+    ("roofline_table", roofline_table),
+)
+
+
+def main() -> int:
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in MODULES:
+        t0 = time.time()
+        try:
+            rows = mod.run()
+            print_rows(rows)
+            print(f"# {name}: {len(rows)} rows in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name}.FAILED,0.00,error")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

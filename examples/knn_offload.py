@@ -1,0 +1,69 @@
+"""KNN partial offload (Table I, VectorDB row): the Pallas distance kernel
+is the producer-side (memory-resident) task, the top-K select the
+consumer-side task, and `stream_offload` folds database chunks through
+the merge under BS / RP / AXLE schedules — chunk results "back-stream"
+into the running top-K exactly like the paper's ring-buffer payloads.
+
+    PYTHONPATH=src python examples/knn_offload.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backstream import (OffloadConfig, OffloadProtocol,
+                                   stream_offload, use_offload)
+from repro.kernels import ops
+
+Q, N, D, K, CHUNKS = 64, 4096, 256, 8, 8
+
+
+def main() -> None:
+    ks = jax.random.split(jax.random.key(0), 2)
+    queries = jax.random.normal(ks[0], (Q, D))
+    db = jax.random.normal(ks[1], (N, D))
+    chunk = N // CHUNKS
+    db_chunks = db.reshape(CHUNKS, chunk, D)
+
+    def producer(i):
+        """CCM-side task: distances of one DB chunk (Pallas kernel path)."""
+        return ops.knn_distances(queries, db_chunks[i], blk_q=64, blk_n=64)
+
+    def consumer(carry, dists):
+        """Host-side task: fold the chunk into the running top-K."""
+        top_d, top_i = carry
+        neg, local = jax.lax.top_k(-dists, K)
+        merged_d = jnp.concatenate([top_d, -neg], axis=1)
+        merged_i = jnp.concatenate([top_i, local], axis=1)   # chunk-local ids
+        best = jnp.argsort(merged_d, axis=1)[:, :K]
+        return (jnp.take_along_axis(merged_d, best, 1),
+                jnp.take_along_axis(merged_i, best, 1))
+
+    init = (jnp.full((Q, K), jnp.inf), jnp.zeros((Q, K), jnp.int32))
+    outs = {}
+    for proto in (OffloadProtocol.BS, OffloadProtocol.RP,
+                  OffloadProtocol.AXLE):
+        with use_offload(OffloadConfig(protocol=proto, ring_depth=2)):
+            f = jax.jit(lambda: stream_offload(producer, consumer, init,
+                                               CHUNKS, protocol=proto))
+            out = f()
+            jax.block_until_ready(out)
+            t0 = time.time()
+            out = f()
+            jax.block_until_ready(out)
+            outs[proto.name] = np.asarray(out[0])
+            print(f"  {proto.name:4s} top-{K} distances in "
+                  f"{(time.time() - t0) * 1e3:.1f} ms")
+    # all protocols produce the same distances; indices may tie-break.
+    assert np.allclose(outs["BS"], outs["RP"], atol=1e-5)
+    assert np.allclose(outs["BS"], outs["AXLE"], atol=1e-5)
+    # cross-check against the monolithic oracle
+    ref_d, _ = ops.knn_topk(queries, db, K)
+    assert np.allclose(np.sort(outs["BS"], 1), np.sort(np.asarray(ref_d), 1),
+                       atol=1e-4)
+    print("all protocols agree with the monolithic top-K oracle ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Batched serving with offload-protocol selection (deliverable (b)).
+
+Serves a reduced mistral-nemo-family model with continuous batching and
+compares the three host↔memory coordination protocols end to end:
+bulk-synchronous (BS), serialized round-trips (RP), and asynchronous
+back-streaming (AXLE).  Outputs must be identical — the protocol only
+changes the *schedule* of the partial-attention merge, never its value.
+
+    PYTHONPATH=src python examples/serve_offload.py
+"""
+import time
+
+import numpy as np
+
+from repro.launch.serve import BatchedServer, Request
+
+
+def serve_with(protocol: str, n_requests: int = 6, max_new: int = 12):
+    rng = np.random.default_rng(7)
+    server = BatchedServer("mistral_nemo_12b", smoke=True, batch_slots=3,
+                           max_seq=128, protocol=protocol,
+                           chunks_per_shard=4)
+    for i in range(n_requests):
+        plen = int(rng.integers(4, 10))
+        server.submit(Request(i, rng.integers(
+            1, server.cfg.vocab, plen).astype(np.int32), max_new))
+    t0 = time.time()
+    server.run_until_drained()
+    dt = time.time() - t0
+    gens = {r.rid: tuple(r.generated) for r in server.completed}
+    toks = sum(len(g) for g in gens.values())
+    print(f"  {protocol:4s}: {len(gens)} requests, {toks} tokens, "
+          f"{server.steps} batched steps, {dt:.2f}s")
+    return gens
+
+
+def main() -> None:
+    print("continuous-batching server, one run per protocol:")
+    outs = {p: serve_with(p) for p in ("bs", "rp", "axle")}
+    assert outs["bs"] == outs["rp"] == outs["axle"], \
+        "protocols must generate identical tokens"
+    print("all protocols generated identical tokens "
+          "(schedule changes, values don't) ✓")
+
+
+if __name__ == "__main__":
+    main()

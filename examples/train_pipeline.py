@@ -1,0 +1,56 @@
+"""End-to-end training driver example (deliverable (b)): trains a ~100M
+decoder-only model for a few hundred steps with the full production path —
+prefetching data pipeline, AdamW + clipping, int8 error-feedback gradient
+compression, checkpoint every 50 steps, restart-from-latest, straggler
+watchdog, preemption-safe shutdown.
+
+    PYTHONPATH=src python examples/train_pipeline.py [--steps 300]
+
+The ~100M config is a width/depth reduction of the starcoder2 family
+(same code path as the full 3B config; the dry-run exercises the latter).
+"""
+import argparse
+import os
+import tempfile
+
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
+                                             "repro_train_pipeline")
+
+    # starcoder2 family @ ~100M: done via the standard config registry —
+    # every assigned arch has a reduced SMOKE config; for this example we
+    # scale the smoke config up to ~100M params via the same dataclass.
+    import dataclasses
+    from repro.configs import get_smoke_config
+    base = get_smoke_config("starcoder2_3b")
+    cfg100m = dataclasses.replace(
+        base, arch_id="starcoder2_100m", n_layers=10, d_model=640,
+        n_heads=10, n_kv_heads=2, d_ff=2560, vocab=32768, head_dim=64)
+    # register it temporarily so train() can find it
+    import repro.configs as configs
+    import types, sys
+    mod = types.ModuleType("repro.configs.starcoder2_100m")
+    mod.CONFIG = cfg100m
+    mod.SMOKE = cfg100m
+    sys.modules["repro.configs.starcoder2_100m"] = mod
+
+    print(f"training {cfg100m.arch_id}: ~{cfg100m.n_params() / 1e6:.0f}M params")
+    out = train("starcoder2_100m", smoke=True, steps=args.steps,
+                batch=8, seq_len=256, ckpt_dir=ckpt_dir, ckpt_every=50,
+                compress=True, lr=3e-3, log_every=25)
+    print(f"\nloss {out['first_loss']:.3f} -> {out['last_loss']:.3f} over "
+          f"{out['steps_run']} steps "
+          f"(stragglers flagged: {out['stragglers_flagged']})")
+    assert out["last_loss"] < out["first_loss"], "loss must decrease"
+    print(f"checkpoints in {ckpt_dir} — rerun to resume from the latest.")
+
+
+if __name__ == "__main__":
+    main()

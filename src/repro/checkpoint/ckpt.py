@@ -1,0 +1,138 @@
+"""Fault-tolerant checkpointing: atomic, retried, mesh-elastic.
+
+Layout: one zstd-compressed msgpack file per step —
+    <dir>/step_<n>.ckpt        (tmp-file + atomic rename)
+    <dir>/latest               (text pointer, atomically replaced)
+
+Elasticity: arrays are stored *unsharded logical* (gathered to host), so
+a checkpoint written on a (16,16) mesh restores onto (2,16,16) — or onto
+this CPU container — by re-sharding at load (`restore(..., shardings=)`).
+That makes the `pod` axis the unit of elastic scaling (DESIGN.md §5).
+
+Fault tolerance: `save` retries transient I/O failures with backoff;
+a crash mid-write never corrupts `latest` (rename is atomic); `restore`
+falls back to the newest *parseable* checkpoint if the latest file is
+truncated (e.g. the node died mid-upload of a non-atomic filesystem).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+_DTYPE_KEY = "__dtype__"
+_BF16 = "bfloat16"
+
+
+def _pack_leaf(x: Any) -> Dict[str, Any]:
+    arr = np.asarray(jax.device_get(x))
+    dtype = str(arr.dtype)
+    if arr.dtype == jnp.bfloat16:
+        arr = arr.view(np.uint16)       # msgpack-safe bf16 encoding
+        dtype = _BF16
+    return {"d": dtype, "s": list(arr.shape), "b": arr.tobytes()}
+
+
+def _unpack_leaf(rec: Dict[str, Any]) -> np.ndarray:
+    dtype, shape, buf = rec["d"], tuple(rec["s"]), rec["b"]
+    if dtype == _BF16:
+        return np.frombuffer(buf, np.uint16).reshape(shape).view(jnp.bfloat16)
+    return np.frombuffer(buf, dtype).reshape(shape)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, retries: int = 3,
+         keep: int = 3) -> str:
+    """Atomically persist `tree` for `step`.  Returns the file path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = msgpack.packb({
+        "step": step,
+        "leaves": [_pack_leaf(x) for x in leaves],
+    })
+    data = zstandard.ZstdCompressor(level=3).compress(payload)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
+    tmp = path + f".tmp.{os.getpid()}"
+    last_err: Optional[Exception] = None
+    for attempt in range(retries):
+        try:
+            with open(tmp, "wb") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)                      # atomic
+            ltmp = os.path.join(ckpt_dir, f".latest.tmp.{os.getpid()}")
+            with open(ltmp, "w") as f:
+                f.write(os.path.basename(path))
+            os.replace(ltmp, os.path.join(ckpt_dir, "latest"))
+            _gc(ckpt_dir, keep)
+            return path
+        except OSError as e:                           # transient I/O
+            last_err = e
+            time.sleep(0.05 * 2 ** attempt)
+    raise RuntimeError(f"checkpoint save failed after {retries} retries"
+                       ) from last_err
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    ckpts = sorted(f for f in os.listdir(ckpt_dir)
+                   if re.fullmatch(r"step_\d+\.ckpt", f))
+    for f in ckpts[:-keep] if keep > 0 else []:
+        try:
+            os.remove(os.path.join(ckpt_dir, f))
+        except OSError:
+            pass
+
+
+def available_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                  if (m := re.fullmatch(r"step_(\d+)\.ckpt", f)))
+
+
+def _load_file(path: str) -> Tuple[int, list]:
+    with open(path, "rb") as f:
+        payload = zstandard.ZstdDecompressor().decompress(f.read())
+    rec = msgpack.unpackb(payload)
+    return rec["step"], [_unpack_leaf(x) for x in rec["leaves"]]
+
+
+def restore(ckpt_dir: str, like: Any, *, shardings: Any = None,
+            step: Optional[int] = None) -> Optional[Tuple[int, Any]]:
+    """Restore the newest (or requested) parseable checkpoint into the
+    structure of `like`, placing leaves per `shardings` (same-structure
+    pytree of jax.sharding.Sharding, or None for default placement).
+    Returns (step, tree) or None when no checkpoint exists."""
+    steps = available_steps(ckpt_dir)
+    if step is not None:
+        steps = [s for s in steps if s == step]
+    for s in reversed(steps):
+        path = os.path.join(ckpt_dir, f"step_{s:08d}.ckpt")
+        try:
+            got_step, leaves = _load_file(path)
+        except Exception:
+            continue                      # truncated/corrupt: fall back
+        treedef = jax.tree.structure(like)
+        flat_like = jax.tree.leaves(like)
+        assert len(leaves) == len(flat_like), (
+            f"checkpoint has {len(leaves)} leaves, expected "
+            f"{len(flat_like)} — incompatible tree")
+        if shardings is not None:
+            flat_sh = jax.tree.leaves(shardings,
+                                      is_leaf=lambda x: x is None or not isinstance(x, dict))
+            placed = [jax.device_put(l, sh) if sh is not None
+                      else jax.device_put(l)
+                      for l, sh in zip(leaves, flat_sh)]
+        else:
+            placed = [jax.device_put(l) for l in leaves]
+        return got_step, treedef.unflatten(placed)
+    return None

@@ -1,0 +1,19 @@
+"""IBM Granite-3.0 MoE: 3B total / 800M active; 40 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="granite_moe_3b", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, d_ff=512,
+    vocab=49155, head_dim=64,
+    n_experts=40, top_k=8, moe_every=1,
+    block_pattern=("full",),
+)
+
+SMOKE = ArchConfig(
+    arch_id="granite_moe_3b_smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=6, n_kv_heads=2, d_ff=32,
+    vocab=515, head_dim=16,     # deliberately non-multiple-of-256 vocab
+    n_experts=5, top_k=2, moe_every=1,
+    block_pattern=("full",),
+)

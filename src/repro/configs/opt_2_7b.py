@@ -1,0 +1,17 @@
+"""OPT-2.7B: the paper's own LLM-inference workload (Table IV (h)): the
+attention block is the offloaded operation, the MLP runs host-side."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="opt_2_7b", family="dense",
+    n_layers=32, d_model=2560, n_heads=32, n_kv_heads=32, d_ff=10240,
+    vocab=50272, head_dim=80,
+    block_pattern=("full",),
+)
+
+SMOKE = ArchConfig(
+    arch_id="opt_2_7b_smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab=512, head_dim=16,
+    block_pattern=("full",),
+)

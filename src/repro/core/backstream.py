@@ -1,0 +1,352 @@
+"""Asynchronous back-streaming as a TPU collective schedule.
+
+The paper's protocol (SS IV): the producer that owns the memory (CCM) pushes
+partial results to the consumer as they are produced, instead of the
+consumer pulling the full result after a bulk-synchronous barrier.  On a
+TPU mesh the analogue (DESIGN.md SS2) is:
+
+  BS    - every shard finishes its partial, then one bulk collective
+          (all-gather) delivers all partials, then the consumer combines.
+  AXLE  - producer-initiated chunked `lax.ppermute` ring: partial results
+          hop around the model axis, each hop's transfer overlapping the
+          local merge compute (XLA async collective-permute start/done).
+  RP    - fully serialized per-chunk round trips (modeled for benchmarks;
+          never a sensible TPU schedule).
+
+Two entry points:
+  * stream_offload(...)            - generic producer->consumer combinator.
+  * decode_attention_combined(...) - the LLM-serving instantiation: flash-
+    decoding over a sequence-sharded KV cache, with partial-attention
+    (acc, m, l) statistics merged under the selected protocol.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import enum
+import functools
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.models import layers as L
+from repro.sharding import active_rules
+
+
+class OffloadProtocol(enum.Enum):
+    RP = "rp"
+    BS = "bs"
+    AXLE = "axle"
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadConfig:
+    protocol: OffloadProtocol = OffloadProtocol.AXLE
+    # chunks per shard for the streamed decode merge (SF analogue: results
+    # per streamed message; 1 chunk == whole shard)
+    chunks_per_shard: int = 1
+    # ring depth for stream_offload pipelining (flow-control credits)
+    ring_depth: int = 2
+
+
+_state = threading.local()
+
+
+def current_offload() -> OffloadConfig:
+    return getattr(_state, "cfg", None) or OffloadConfig()
+
+
+@contextlib.contextmanager
+def use_offload(cfg: OffloadConfig):
+    prev = getattr(_state, "cfg", None)
+    _state.cfg = cfg
+    try:
+        yield
+    finally:
+        _state.cfg = prev
+
+
+# --------------------------------------------------------------------------
+# Generic combinator
+# --------------------------------------------------------------------------
+
+def stream_offload(producer: Callable[[jax.Array], Any],
+                   consumer: Callable[[Any, Any], Any],
+                   init: Any, num_chunks: int,
+                   protocol: OffloadProtocol = OffloadProtocol.AXLE) -> Any:
+    """Run `num_chunks` producer tasks and fold their results through
+    `consumer`, under the given protocol's schedule.
+
+    producer(i) -> partial_i   (the memory-side task; i is a traced index)
+    consumer(carry, partial_i) -> carry   (the downstream task)
+
+    BS   : all partials produced (vectorized), then all consumed - the
+           producer/consumer phases are strictly serialized, like the bulk
+           synchronous result load.
+    RP   : produce_i -> consume_i, strictly interleaved (serial round trips).
+    AXLE : software-pipelined: while partial_i is being consumed, partial_
+           i+1 is already in flight - expressed as a scan whose body carries
+           a `ring_depth`-deep ring of in-flight partials, which XLA
+           schedules with overlapping async ops.
+    """
+    idxs = jnp.arange(num_chunks)
+    if protocol == OffloadProtocol.BS:
+        partials = lax.map(producer, idxs)             # produce everything
+        def fold(c, p):
+            return consumer(c, p), None
+        carry, _ = lax.scan(fold, init, partials)      # then consume
+        return carry
+    if protocol == OffloadProtocol.RP:
+        def step(c, i):
+            return consumer(c, producer(i)), None
+        carry, _ = lax.scan(step, init, idxs)
+        return carry
+    # AXLE: one-chunk-lookahead pipeline (generalizes to ring_depth via
+    # optimizer; the data dependence producer(i+1) || consumer(partial_i)
+    # is what lets XLA overlap the transfer with the merge).
+    depth = max(1, current_offload().ring_depth - 1)
+
+    def step(carry, i):
+        fold_carry, in_flight = carry
+        arrived = in_flight[0]
+        in_flight = jax.tree.map(
+            lambda b, n: jnp.concatenate([b[1:], n[None]], axis=0)
+            if b.ndim > 0 else n,
+            in_flight,
+            producer(jnp.minimum(i + depth, num_chunks - 1)))
+        fold_carry = consumer(fold_carry, arrived)
+        return (fold_carry, in_flight), None
+
+    first = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[producer(jnp.minimum(jnp.asarray(k), num_chunks - 1))
+          for k in range(depth)])
+    (carry, _), _ = lax.scan(step, (init, first), idxs)
+    return carry
+
+
+# --------------------------------------------------------------------------
+# Sharded KV-cache ring-slot update
+# --------------------------------------------------------------------------
+
+def cache_update_sharded(cache: jax.Array, new: jax.Array,
+                         slot: jax.Array) -> jax.Array:
+    """Write one token's K or V into slot `slot` of a sequence-sharded
+    cache (B, KH, S, hd) without the whole-slice select that GSPMD emits
+    for a dynamic-update-slice on a sharded dim (§Perf iteration D4).
+
+    Under shard_map the slot lands in exactly one shard; every shard does
+    a dense one-token dynamic-update-slice at the clamped local offset —
+    non-owners rewrite their current value (2×token bytes of traffic
+    instead of 2×S_local·hd)."""
+    rules = active_rules()
+    mesh = rules.mesh if rules is not None else None
+    axis = rules.model_axis if rules is not None else None
+    b, kh, s, hd = cache.shape
+    if (mesh is None or axis is None or not rules.seq_shard_attn
+            or s % mesh.shape[axis] or mesh.shape[axis] == 1):
+        return lax.dynamic_update_slice(cache, new, (0, 0, slot, 0))
+
+    b_axes = rules.batch_axes
+    b_size = 1
+    for a in b_axes:
+        b_size *= mesh.shape[a]
+    if b_size == 0 or b % b_size:
+        b_axes = None
+
+    def local(c, n):
+        s_loc = c.shape[2]
+        start = lax.axis_index(axis) * s_loc
+        loc = jnp.clip(slot - start, 0, s_loc - 1)
+        mine = (slot >= start) & (slot < start + s_loc)
+        old = lax.dynamic_slice(c, (0, 0, loc, 0), n.shape)
+        val = jnp.where(mine, n, old)
+        return lax.dynamic_update_slice(c, val, (0, 0, loc, 0))
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(b_axes, None, axis, None), P(b_axes, None, None, None)),
+        out_specs=P(b_axes, None, axis, None),
+        check_rep=False,
+    )(cache, new)
+
+
+def cache_update_stacked(cache: jax.Array, new: jax.Array,
+                         slot: jax.Array) -> jax.Array:
+    """Layer-stacked variant: cache (L,B,KH,S,hd), new (L,B,KH,1,hd).
+    One ring-slot write for ALL layers at once, issued outside the layer
+    scan (§Perf iteration D5) — total update traffic is L·B·KH·hd·2 bytes
+    instead of a full-slice re-stack per layer."""
+    rules = active_rules()
+    mesh = rules.mesh if rules is not None else None
+    axis = rules.model_axis if rules is not None else None
+    nl, b, kh, s, hd = cache.shape
+    if (mesh is None or axis is None or not rules.seq_shard_attn
+            or s % mesh.shape[axis] or mesh.shape[axis] == 1):
+        return lax.dynamic_update_slice(cache, new.astype(cache.dtype),
+                                        (0, 0, 0, slot, 0))
+
+    b_axes = rules.batch_axes
+    b_size = 1
+    for a in b_axes:
+        b_size *= mesh.shape[a]
+    if b_size == 0 or b % b_size:
+        b_axes = None
+
+    def local(c, n):
+        s_loc = c.shape[3]
+        start = lax.axis_index(axis) * s_loc
+        loc = jnp.clip(slot - start, 0, s_loc - 1)
+        mine = (slot >= start) & (slot < start + s_loc)
+        old = lax.dynamic_slice(c, (0, 0, 0, loc, 0), n.shape)
+        val = jnp.where(mine, n.astype(c.dtype), old)
+        return lax.dynamic_update_slice(c, val, (0, 0, 0, loc, 0))
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, b_axes, None, axis, None),
+                  P(None, b_axes, None, None, None)),
+        out_specs=P(None, b_axes, None, axis, None),
+        check_rep=False,
+    )(cache, new)
+
+
+# --------------------------------------------------------------------------
+# Decode attention: flash-decoding merge under each protocol
+# --------------------------------------------------------------------------
+
+def _partials_over_chunks(q, k, v, kv_valid, n_chunks):
+    """Split the KV sequence into n_chunks and compute partial attention for
+    each: returns acc (n,B,H,hd), m (n,B,H), l (n,B,H).
+    k/v: (B, KH, S, hd) — the flash-decoding cache layout."""
+    b, kh, s, hd = k.shape
+    assert s % n_chunks == 0, (s, n_chunks)
+    c = s // n_chunks
+    kc = k.reshape(b, kh, n_chunks, c, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, kh, n_chunks, c, hd).transpose(2, 0, 1, 3, 4)
+    valc = kv_valid.reshape(b, n_chunks, c).transpose(1, 0, 2)
+
+    def one(args):
+        kk, vv, val = args
+        return L.decode_attention_partial(q, kk, vv, val)
+
+    return lax.map(one, (kc, vc, valc))
+
+
+def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
+                              v_cache: jax.Array, pos: jax.Array,
+                              *, window: int = 0,
+                              n_chunks: Optional[int] = None,
+                              extra: Optional[Any] = None) -> jax.Array:
+    """Single-step attention of q (B,1,H,hd) against a (possibly sequence-
+    sharded) KV cache (B,KH,S,hd), combined under the active offload
+    protocol.  Returns (B, 1, H, hd).
+
+    Under GSPMD, chunking along the sequence axis aligns chunks with the
+    sequence shards of the cache: each 'CCM-side' shard computes the partial
+    attention over the KV bytes it owns, and only the tiny (acc, m, l)
+    statistics cross shards - this is the paper's partial-offload structure
+    (Table I, LLM row).  BS merges them with one bulk collective; AXLE
+    streams them around the ring with ppermute hops that overlap compute.
+    """
+    cfg = current_offload()
+    rules = active_rules()
+    b, kh, s, hd = k_cache.shape
+    slots = jnp.arange(s)
+    kv_valid = jnp.broadcast_to((slots <= pos)[None], (b, s))
+    if window:
+        kv_valid = kv_valid & jnp.broadcast_to(
+            (slots > pos - window)[None], (b, s))
+
+    mesh = rules.mesh if rules is not None else None
+    axis = rules.model_axis if rules is not None else None
+    n_shards = mesh.shape[axis] if (mesh is not None and axis) else 1
+    if n_chunks is None:
+        n_chunks = max(n_shards, 1) * max(1, cfg.chunks_per_shard)
+        n_chunks = min(n_chunks, s)
+
+    if (cfg.protocol == OffloadProtocol.AXLE and mesh is not None
+            and axis is not None and s % n_shards == 0 and n_shards > 1):
+        # shard_map needs exact divisibility; drop the batch sharding for
+        # tiny batches (e.g. the batch-1 long_500k cells).
+        b_axes = rules.batch_axes
+        b_size = 1
+        for a in b_axes:
+            b_size *= mesh.shape[a]
+        if b_size == 0 or b % b_size:
+            b_axes = None
+        return _axle_ring_decode(q, k_cache, v_cache, kv_valid, mesh, axis,
+                                 b_axes, extra)
+
+    # BS / RP / single-shard path: chunked partials + one merge.  With a
+    # sequence-sharded cache GSPMD lowers the merge to a bulk all-gather of
+    # the (acc, m, l) statistics: the bulk-synchronous flow.
+    accs, ms, ls = _partials_over_chunks(q, k_cache, v_cache, kv_valid,
+                                         n_chunks)
+    if extra is not None:
+        acc_e, m_e, l_e = extra
+        accs = jnp.concatenate([accs, acc_e[None]], axis=0)
+        ms = jnp.concatenate([ms, m_e[None]], axis=0)
+        ls = jnp.concatenate([ls, l_e[None]], axis=0)
+    out = L.merge_attention_partials(accs, ms, ls)       # (B,H,hd)
+    return out[:, None].astype(q.dtype)
+
+
+def _axle_ring_decode(q, k_cache, v_cache, kv_valid, mesh, axis, batch_axes,
+                      extra=None):
+    """Producer-initiated ring streaming of partial-attention statistics.
+
+    Each model shard computes the partial over its own KV chunk, then the
+    running merge state hops around the ring via ppermute; every hop's
+    transfer overlaps the next local merge (XLA emits async
+    collective-permute start/done pairs).  Bytes on the wire per hop:
+    B*H*(hd+2) floats - vs the all-gather of all shards' partials at once in
+    the BS schedule."""
+    n = mesh.shape[axis]
+    has_extra = extra is not None
+    extra_args = tuple(extra) if has_extra else ()
+
+    def local(q_l, k_l, v_l, valid_l, *extra_l):
+        acc, m, l = L.decode_attention_partial(q_l, k_l, v_l, valid_l)
+        # ring-reduce the merge: n-1 hops; hop k delivers the partial of
+        # shard (i - k) to shard i, so after n-1 hops every shard holds the
+        # full merge.  Each hop's transfer overlaps the local merge math.
+        acc_r, m_r, l_r = acc, m, l
+        out_a, out_l = acc, l
+        m_run = m
+        for _ in range(n - 1):
+            perm = [(i, (i + 1) % n) for i in range(n)]
+            acc_r = lax.ppermute(acc_r, axis, perm)
+            m_r = lax.ppermute(m_r, axis, perm)
+            l_r = lax.ppermute(l_r, axis, perm)
+            m_new = jnp.maximum(m_run, m_r)
+            out_a = out_a * jnp.exp(m_run - m_new)[..., None] \
+                + acc_r * jnp.exp(m_r - m_new)[..., None]
+            out_l = out_l * jnp.exp(m_run - m_new) + l_r * jnp.exp(m_r - m_new)
+            m_run = m_new
+        if extra_l:
+            acc_e, m_e, l_e = extra_l      # current token's own partial
+            m_new = jnp.maximum(m_run, m_e)
+            out_a = out_a * jnp.exp(m_run - m_new)[..., None] \
+                + acc_e * jnp.exp(m_e - m_new)[..., None]
+            out_l = out_l * jnp.exp(m_run - m_new) + l_e * jnp.exp(m_e - m_new)
+            m_run = m_new
+        out = out_a / jnp.maximum(out_l, 1e-20)[..., None]
+        return out[:, None].astype(q_l.dtype)
+
+    extra_specs = ((P(batch_axes, None, None), P(batch_axes, None),
+                    P(batch_axes, None)) if has_extra else ())
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(batch_axes, None, None, None),   # q replicated over model
+                  P(batch_axes, None, axis, None),   # (B,KH,S,hd): shard S
+                  P(batch_axes, None, axis, None),
+                  P(batch_axes, axis)) + extra_specs,
+        out_specs=P(batch_axes, None, None, None),
+        check_rep=False,
+    )(q, k_cache, v_cache, kv_valid, *extra_args)

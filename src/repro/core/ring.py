@@ -1,0 +1,95 @@
+"""Gap-aware ring buffer index algebra (SS IV-C of the paper), JAX-traceable.
+
+AXLE's DMA region is a pair of fixed-size ring buffers (metadata + payload).
+Out-of-order consumption requires a *gap-aware* head: the head index only
+advances over the maximal contiguous consumed prefix, while arbitrary slots
+in (head, tail) may already be consumed.  The producer (CCM) manages credits
+against a *stale* head - always conservative, never unsafe.
+
+This module implements that index algebra on JAX arrays so the streamed
+pipelines in `backstream.py` (and tests mirroring the paper's
+memory-correctness invariants) can use it under jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RingState:
+    """capacity = consumed.shape[0].  All indexes are monotonic (un-wrapped);
+    the physical slot of logical index i is i % capacity."""
+    consumed: jax.Array     # (capacity,) bool - physical slots consumed flag
+    head: jax.Array         # scalar int32: max contiguous consumed prefix
+    tail: jax.Array         # scalar int32: next slot to allocate
+    stale_head: jax.Array   # producer's last known head (flow control)
+
+
+def make_ring(capacity: int) -> RingState:
+    return RingState(
+        consumed=jnp.zeros((capacity,), bool),
+        head=jnp.zeros((), jnp.int32),
+        tail=jnp.zeros((), jnp.int32),
+        stale_head=jnp.zeros((), jnp.int32),
+    )
+
+
+def capacity(ring: RingState) -> int:
+    return ring.consumed.shape[0]
+
+
+def free_slots_producer(ring: RingState) -> jax.Array:
+    """Credits from the producer's (stale, conservative) point of view."""
+    return capacity(ring) - (ring.tail - ring.stale_head)
+
+
+def can_allocate(ring: RingState, n: jax.Array) -> jax.Array:
+    return n <= free_slots_producer(ring)
+
+
+def allocate(ring: RingState, n: jax.Array) -> Tuple[RingState, jax.Array]:
+    """Allocate n slots (caller must have checked can_allocate).  Returns the
+    starting logical index."""
+    start = ring.tail
+    return dataclasses.replace(ring, tail=ring.tail + n), start
+
+
+def consume(ring: RingState, idx: jax.Array) -> RingState:
+    """Mark logical slot `idx` consumed (OoO allowed) and advance the head
+    over the maximal contiguous consumed prefix."""
+    cap = capacity(ring)
+    consumed = ring.consumed.at[idx % cap].set(True)
+
+    def cond(state):
+        head, cons = state
+        return jnp.logical_and(head < ring.tail, cons[head % cap])
+
+    def body(state):
+        head, cons = state
+        return head + 1, cons.at[head % cap].set(False)
+
+    head, consumed = jax.lax.while_loop(cond, body, (ring.head, consumed))
+    return dataclasses.replace(ring, consumed=consumed, head=head)
+
+
+def flow_control_update(ring: RingState) -> RingState:
+    """Deliver the consumer's head to the producer (CXL.mem store arrives)."""
+    return dataclasses.replace(
+        ring, stale_head=jnp.maximum(ring.stale_head, ring.head))
+
+
+def invariants_ok(ring: RingState) -> jax.Array:
+    """The paper's consistency invariant set (SS IV-C):
+       stale_head <= head <= tail,  tail - head <= capacity,
+       monotonic indexes are maintained by construction."""
+    cap = capacity(ring)
+    return (
+        (ring.stale_head <= ring.head)
+        & (ring.head <= ring.tail)
+        & (ring.tail - ring.head <= cap)
+    )

@@ -1,0 +1,229 @@
+"""Pallas TPU flash attention (prefill) and partial decode attention.
+
+The paper offloads the *attention block* of LLM inference to the
+memory-side compute (Table I).  On TPU the analogue is running attention
+where the KV bytes live; these kernels are the compute hot-spot of that
+offload:
+
+  * `flash_attention_kernel` — causal / sliding-window GQA flash attention
+    with online softmax.  Grid (B, H, n_q, n_k): the KV axis is innermost
+    and accumulates partial-softmax statistics in VMEM scratch, exactly
+    the (acc, m, l) statistic stream that the back-streaming protocol
+    ships between shards.
+  * `decode_partial_kernel` — single-token attention over one KV chunk,
+    emitting the raw (acc, m, l) partials.  This is the producer-side
+    task of `repro.core.backstream.decode_attention_combined`.
+
+VMEM budget per grid cell (bf16 inputs, f32 scratch):
+  q (blk_q, hd) + k,v (blk_k, hd) + acc (blk_q, hd) + p (blk_q, blk_k).
+With blk_q = blk_k = 128 and hd = 128 that is ~0.3 MB — far below the
+~16 MB VMEM of a v5e core, leaving room for XLA's double buffering.
+All matmul dims are multiples of 128 => MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Prefill flash attention
+# --------------------------------------------------------------------------
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, blk_q: int, blk_k: int, causal: bool,
+                  window: int, n_k: int):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block (innermost, accumulating)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (blk_q, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (blk_k, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    qpos = i * blk_q + lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+    kpos = j * blk_k + lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = jnp.ones((blk_q, blk_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot(p, v, preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,S,H,hd); k,v: (B,S,KH,hd) -> (B,S,H,hd).  GQA supported."""
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    assert h % kh == 0
+    group = h // kh
+    blk_q = min(blk_q, s)
+    blk_k = min(blk_k, s)
+    assert s % blk_q == 0 and s % blk_k == 0, (s, blk_q, blk_k)
+    n_q, n_k = s // blk_q, s // blk_k
+    scale = scale if scale is not None else hd ** -0.5
+
+    # (B,H,S,hd) layout so the (q block, kv block) tiles are contiguous.
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, blk_q=blk_q, blk_k=blk_k,
+        causal=causal, window=window, n_k=n_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, hd), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, blk_k, hd),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+            pl.BlockSpec((1, 1, blk_k, hd),
+                         lambda b_, h_, i, j: (b_, h_ // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, hd),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)
+
+
+# --------------------------------------------------------------------------
+# Decode: partial-softmax statistics over one KV chunk
+# --------------------------------------------------------------------------
+
+def _decode_partial_kernel(q_ref, k_ref, v_ref, valid_ref,
+                           acc_ref, m_ref, l_ref,
+                           acc_s, m_s, l_s, *,
+                           scale: float, blk_c: int, n_c: int):
+    j = pl.program_id(2)          # chunk block (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale           # (group, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                   # (blk_c, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    valid = valid_ref[0]                                  # (blk_c,) bool
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=-1)
+    acc_s[...] = (acc_s[...] * alpha[:, None]
+                  + jax.lax.dot(p, v, preferred_element_type=jnp.float32))
+    m_s[...] = m_new
+
+    @pl.when(j == n_c - 1)
+    def _finish():
+        acc_ref[0, 0] = acc_s[...]
+        # NEG_INF sentinel -> -inf so the merge ignores empty partials.
+        m = m_s[...]
+        m_ref[0, 0] = jnp.where(m <= NEG_INF / 2, -jnp.inf, m)
+        l_ref[0, 0] = l_s[...]
+
+
+def decode_attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
+                             valid: jax.Array, *, blk_c: int = 128,
+                             interpret: bool = False
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """q: (B,1,H,hd); k,v: (B,KH,C,hd) — flash-decoding cache layout;
+    valid: (B,C) bool.
+    Returns (acc (B,H,hd) f32, m (B,H) f32, l (B,H) f32)."""
+    b, _, h, hd = q.shape
+    kh, c = k.shape[1], k.shape[2]
+    group = h // kh
+    blk_c = min(blk_c, c)
+    assert c % blk_c == 0
+    n_c = c // blk_c
+    scale = hd ** -0.5
+
+    qt = q[:, 0].reshape(b, kh, group, hd)                # (B,KH,group,hd)
+    kt = k
+    vt = v
+
+    kernel = functools.partial(_decode_partial_kernel, scale=scale,
+                               blk_c=blk_c, n_c=n_c)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, kh, n_c),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd), lambda b_, h_, j: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, blk_c, hd), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, blk_c, hd), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, blk_c), lambda b_, h_, j: (b_, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, group, hd), lambda b_, h_, j: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, group), lambda b_, h_, j: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, group), lambda b_, h_, j: (b_, h_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, group, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, group), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, group), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, hd), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qt, kt, vt, valid)
+    return (acc.reshape(b, h, hd), m.reshape(b, h), l.reshape(b, h))

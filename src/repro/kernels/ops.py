@@ -1,0 +1,83 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU the Pallas lowering runs natively; on CPU (this
+container) the wrappers fall back to the pure-jnp oracles in `ref.py`
+unless `interpret=True` is requested, which executes the kernel body in
+Pallas interpret mode (the correctness path the tests sweep).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import knn as _knn
+from repro.kernels import ref as _ref
+from repro.kernels import sls as _sls
+from repro.kernels import ssd as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "blk_q", "blk_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    if _on_tpu() or interpret:
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   blk_q=blk_q, blk_k=blk_k,
+                                   interpret=interpret)
+    return _ref.mha_reference(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_c", "interpret"))
+def decode_attention_partial(q, k, v, valid, *, blk_c: int = 128,
+                             interpret: bool = False
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    if _on_tpu() or interpret:
+        return _fa.decode_attention_partial(q, k, v, valid, blk_c=blk_c,
+                                            interpret=interpret)
+    return _ref.decode_partial_reference(q, k, v, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_q", "blk_n", "interpret"))
+def knn_distances(queries, db, *, blk_q: int = 128, blk_n: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    if _on_tpu() or interpret:
+        return _knn.knn_distances(queries, db, blk_q=blk_q, blk_n=blk_n,
+                                  interpret=interpret)
+    return _ref.knn_distances_reference(queries, db)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "blk_q", "blk_n",
+                                             "interpret"))
+def knn_topk(queries, db, k: int, *, blk_q: int = 128, blk_n: int = 128,
+             interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    if _on_tpu() or interpret:
+        return _knn.knn_topk(queries, db, k, blk_q=blk_q, blk_n=blk_n,
+                             interpret=interpret)
+    return _ref.knn_topk_reference(queries, db, k)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_b", "interpret"))
+def sls(table, indices, weights=None, *, blk_b: int = 8,
+        interpret: bool = False) -> jax.Array:
+    if _on_tpu() or interpret:
+        return _sls.sls(table, indices, weights, blk_b=blk_b,
+                        interpret=interpret)
+    return _ref.sls_reference(table, indices, weights)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_s", "interpret"))
+def ssd_scan(x, dt, A, B, C, init_state=None, *, blk_s: int = 128,
+             interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    if _on_tpu() or interpret:
+        return _ssd.ssd_scan(x, dt, A, B, C, init_state, blk_s=blk_s,
+                             interpret=interpret)
+    return _ref.ssd_reference(x, dt, A, B, C, init_state)

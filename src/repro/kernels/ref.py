@@ -1,0 +1,144 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the numerical ground truth the kernels are validated
+against (interpret=True on CPU, real lowering on TPU).  They are also the
+fallback implementation `ops.py` dispatches to on non-TPU backends.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Flash attention (the paper's LLM-inference offload target, Table I)
+# --------------------------------------------------------------------------
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Multi-head attention with GQA.  q: (B,S,H,hd); k,v: (B,S,KH,hd).
+    window > 0 => sliding-window causal attention.  Returns (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    assert h % kh == 0
+    group = h // kh
+    scale = scale if scale is not None else hd ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)
+
+
+def decode_partial_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                             valid: jax.Array
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Partial-softmax decode attention over one KV chunk.
+
+    q: (B,1,H,hd); k,v: (B,KH,C,hd) — flash-decoding cache layout;
+    valid: (B,C) bool.
+    Returns (acc (B,H,hd), m (B,H), l (B,H)) — the streamable statistics
+    merged across chunks by the back-streaming protocol."""
+    b, _, h, hd = q.shape
+    kh = k.shape[1]
+    group = h // kh
+    scale = hd ** -0.5
+    qf = q[:, 0].astype(jnp.float32) * scale          # (B,H,hd)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    kf = kf.transpose(0, 2, 1, 3)                      # (B,C,H,hd)
+    vf = vf.transpose(0, 2, 1, 3)
+    logits = jnp.einsum("bhd,bchd->bhc", qf, kf)
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1)                       # (B,H)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(logits - m_safe[..., None])
+    p = jnp.where(valid[:, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhc,bchd->bhd", p, vf)
+    m = jnp.where(jnp.isfinite(m), m, -jnp.inf)
+    return acc, m, l
+
+
+# --------------------------------------------------------------------------
+# KNN distances (VectorDB offload target)
+# --------------------------------------------------------------------------
+
+def knn_distances_reference(queries: jax.Array, db: jax.Array) -> jax.Array:
+    """Squared L2 distances.  queries: (Q,D), db: (N,D) -> (Q,N) float32."""
+    qf = queries.astype(jnp.float32)
+    xf = db.astype(jnp.float32)
+    q2 = jnp.sum(qf * qf, axis=-1, keepdims=True)      # (Q,1)
+    x2 = jnp.sum(xf * xf, axis=-1)                      # (N,)
+    return q2 - 2.0 * (qf @ xf.T) + x2[None, :]
+
+
+def knn_topk_reference(queries: jax.Array, db: jax.Array, k: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """k nearest rows by squared L2: returns (dists (Q,k), idx (Q,k))."""
+    d = knn_distances_reference(queries, db)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx
+
+
+# --------------------------------------------------------------------------
+# Sparse Length Sum (DLRM offload target)
+# --------------------------------------------------------------------------
+
+def sls_reference(table: jax.Array, indices: jax.Array,
+                  weights: Optional[jax.Array] = None) -> jax.Array:
+    """Embedding-bag pooled sum.  table: (V,D); indices: (B,L) int32;
+    weights: (B,L) or None -> (B,D) in float32."""
+    rows = jnp.take(table, indices, axis=0).astype(jnp.float32)  # (B,L,D)
+    if weights is not None:
+        rows = rows * weights.astype(jnp.float32)[..., None]
+    return jnp.sum(rows, axis=1)
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD chunked scan (sequence-parallel state handoff target)
+# --------------------------------------------------------------------------
+
+def ssd_reference(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                  C: jax.Array,
+                  init_state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (non-chunked) SSD recurrence — the exact oracle.
+
+    x: (b,s,h,p); dt: (b,s,h) f32; A: (h,) f32; B,C: (b,s,n).
+    Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                          # (b,h,p),(b,h),(b,n),(b,n)
+        decay = jnp.exp(dtt * A[None, :])              # (b,h)
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], Bt)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    init = (init_state.astype(jnp.float32) if init_state is not None
+            else jnp.zeros((b, h, p, n), jnp.float32))
+    final, ys = jax.lax.scan(
+        step, init,
+        (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+         Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

@@ -1,0 +1,181 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the very first two lines — jax locks the device count on first
+init, and only the dry-run wants 512 placeholder devices:
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as sh
+from repro.configs import ARCH_IDS, SHAPES, get_config, input_specs, shape_supported
+from repro.launch import partition
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as steps_lib
+from repro.models.registry import get_model
+from repro.optim import adamw
+from repro.roofline import analysis
+
+
+def _mesh_name(multi_pod: bool) -> str:
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def _abstract(tree: Any) -> Any:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             remat: bool = True, seq_shard_train: bool = False,
+             collect_roofline: bool = True) -> Dict[str, Any]:
+    """Lower + compile one cell.  Returns a JSON-able report row."""
+    cfg = get_config(arch_id)
+    seq, batch, kind = SHAPES[shape_name]
+    row: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name, "mesh": _mesh_name(multi_pod),
+        "kind": kind,
+    }
+    skip = shape_supported(cfg, shape_name)
+    if skip:
+        row["status"] = "skipped"
+        row["reason"] = skip
+        return row
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    model = get_model(cfg)
+    t0 = time.time()
+
+    # Decode shapes shard the KV cache sequence over the model axis
+    # (flash-decoding — the back-streaming integration point).  Training
+    # sequence-shards the residual stream (§Perf W3) so remat carries fit.
+    rules = sh.ShardingRules(mesh, seq_shard_attn=(kind == "decode"),
+                             seq_shard_acts=(kind == "train"))
+    plan = partition.make_plan(cfg, rules, train=(kind == "train"))
+    specs_in = input_specs(cfg, shape_name)
+    b_specs = partition.batch_specs(specs_in, plan)
+    ab_params = model.abstract_params(cfg)
+    p_specs = partition.param_specs(ab_params, cfg, plan)
+
+    with mesh, sh.use_rules(rules):
+        if kind == "train":
+            opt_cfg = adamw.AdamWConfig()
+            step = steps_lib.make_train_step(cfg, opt_cfg)
+            ab_opt = jax.eval_shape(adamw.init, ab_params)
+            o_specs = partition.opt_state_specs(ab_opt, p_specs)
+            in_shardings = (partition.to_shardings(p_specs, mesh),
+                            partition.to_shardings(o_specs, mesh),
+                            None,
+                            partition.to_shardings(b_specs, mesh))
+            jitted = jax.jit(
+                lambda p, o, c, b: step(p, o, c, b),
+                in_shardings=in_shardings)
+            lowered = jitted.lower(ab_params, ab_opt, None, specs_in)
+        elif kind == "prefill":
+            step = steps_lib.make_prefill_step(cfg)
+            in_shardings = (partition.to_shardings(p_specs, mesh),
+                            partition.to_shardings(b_specs, mesh))
+            jitted = jax.jit(step, in_shardings=in_shardings)
+            lowered = jitted.lower(ab_params, specs_in)
+        else:  # decode
+            step = steps_lib.make_serve_step(cfg)
+            if cfg.enc_dec:
+                ab_cache = model.abstract_cache(cfg, batch, min(seq, 32768))
+            else:
+                ab_cache = model.abstract_cache(cfg, batch, seq)
+            c_specs = partition.cache_specs(ab_cache, cfg, plan)
+            tokens = specs_in["tokens"]
+            tok_spec = partition.batch_specs({"tokens": tokens}, plan)
+            in_shardings = (partition.to_shardings(p_specs, mesh),
+                            partition.to_shardings(c_specs, mesh),
+                            partition.to_shardings(tok_spec["tokens"], mesh))
+            # Donate the cache: XLA aliases the scan's stacked ys output
+            # onto the input buffer, so the ring-slot update is in place
+            # instead of a full cache copy per step (§Perf iteration D3).
+            jitted = jax.jit(step, in_shardings=in_shardings,
+                             donate_argnums=(1,))
+            lowered = jitted.lower(ab_params, ab_cache, tokens)
+
+        compiled = lowered.compile()
+
+    row["lower_compile_s"] = round(time.time() - t0, 1)
+    mem = compiled.memory_analysis()
+    row["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                       + getattr(mem, "temp_size_in_bytes", 0)),
+    }
+    row["status"] = "ok"
+    if collect_roofline:
+        mflops = analysis.model_flops_estimate(cfg, shape_name, seq, batch,
+                                               kind)
+        terms = analysis.analyze(
+            compiled, arch=arch_id, shape=shape_name,
+            mesh_name=row["mesh"], chips=chips, model_flops=mflops)
+        row["roofline"] = terms.row()
+    return row
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (default)")
+    ap.add_argument("--shape", default="all", choices=list(SHAPES) + ["all"])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--out", default="dryrun_report.json")
+    ap.add_argument("--append", action="store_true",
+                    help="merge into an existing report file")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    rows = []
+    if args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            rows = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in rows}
+
+    n_fail = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, _mesh_name(multi_pod))
+                if key in done:
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    row = run_cell(arch, shape, multi_pod=multi_pod)
+                except Exception as e:          # a failure here is a bug
+                    traceback.print_exc()
+                    row = {"arch": arch, "shape": shape,
+                           "mesh": _mesh_name(multi_pod),
+                           "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                    n_fail += 1
+                rows.append(row)
+                print(f"[dryrun]   -> {row['status']} "
+                      f"({row.get('lower_compile_s', '-')}s)", flush=True)
+                with open(args.out, "w") as f:
+                    json.dump(rows, f, indent=1, default=str)
+    print(f"[dryrun] wrote {args.out}: {len(rows)} rows, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,24 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN §1).
+
+A function, not a module-level constant: importing this module never
+touches jax device state, so smoke tests keep seeing 1 device while the
+dry-run sees the 512 placeholder devices it forces via XLA_FLAGS.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (one TPU v5e pod slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the `pod` axis is
+    the unit of elastic scaling and joins `data` for batch/FSDP sharding."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh over however many (host-platform) devices exist — used by
+    the sharded integration tests."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

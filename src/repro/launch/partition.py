@@ -1,0 +1,176 @@
+"""Parameter / optimizer / cache / batch partition specs.
+
+Maps every leaf of the model state onto the production mesh:
+
+  TP   ("model")         — attention projections, FFN hidden, vocab,
+                           expert dim (EP) when divisible, SSM heads.
+  FSDP ("pod","data")    — d_model dim of the big archs' weights, so
+                           params + AdamW state fit the 16 GB/chip HBM.
+  batch ("pod","data")   — activations, KV caches (+ "model" over the KV
+                           sequence axis for the flash-decoding /
+                           back-streaming serving path).
+
+Leaves are classified by name and (stacked) rank, so the same rules cover
+the decoder-only, enc-dec, MoE, and hybrid/SSM parameter trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.sharding import ShardingRules
+
+
+def _divisible(n: int, mesh: Mesh, axes) -> bool:
+    if not axes:
+        return True
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return size > 0 and n % size == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    rules: ShardingRules
+    fsdp: bool              # shard weight d_model dim over ("pod","data")
+
+    @property
+    def mesh(self) -> Mesh:
+        return self.rules.mesh
+
+    @property
+    def tp(self) -> Optional[str]:
+        return self.rules.model_axis
+
+    @property
+    def fsdp_axes(self) -> Optional[Tuple[str, ...]]:
+        return self.rules.batch_axes if self.fsdp else None
+
+
+def _leaf_spec(plan: PartitionPlan, cfg: ArchConfig, name: str,
+               leaf: Any) -> P:
+    """Spec for one stacked parameter leaf (leading n_blocks dim for block
+    params; embeddings/final norms are unstacked)."""
+    mesh, tp, fs = plan.mesh, plan.tp, plan.fsdp_axes
+    shape = leaf.shape
+    nd = len(shape)
+
+    def ax(dim_size, axes):
+        return axes if (axes and _divisible(dim_size, mesh, axes)) else None
+
+    if name == "embed":                                  # (V, D)
+        return P(ax(shape[0], tp), None)
+    if name in ("ln", "final_ln", "enc_final_ln", "dt_bias", "A_log", "D"):
+        return P(*([None] * nd))
+    if name == "router":                                 # (nb, d, e)
+        return P(*([None] * nd))
+    if name in ("wq", "wk", "wv", "w_z", "w_x"):         # (nb, d, out)
+        return P(None, ax(shape[1], fs), ax(shape[2], tp))
+    if name in ("wo", "out_proj"):                       # (nb, in, d)
+        return P(None, ax(shape[1], tp), ax(shape[2], fs))
+    if name in ("w_gate", "w_up"):
+        if nd == 4:                                      # MoE (nb, e, d, f)
+            if tp and _divisible(shape[1], mesh, tp):    # EP over experts
+                return P(None, tp, ax(shape[2], fs), None)
+            return P(None, None, ax(shape[2], fs), ax(shape[3], tp))
+        return P(None, ax(shape[1], fs), ax(shape[2], tp))   # (nb, d, f)
+    if name == "w_down":
+        if nd == 4:                                      # MoE (nb, e, f, d)
+            if tp and _divisible(shape[1], mesh, tp):
+                return P(None, tp, None, ax(shape[3], fs))
+            return P(None, None, ax(shape[2], tp), ax(shape[3], fs))
+        return P(None, ax(shape[1], tp), ax(shape[2], fs))   # (nb, f, d)
+    if name in ("w_B", "w_C", "w_dt"):                   # (nb, d, n)
+        return P(None, ax(shape[1], fs), None)
+    if name == "conv_w":                                 # (nb, w, di)
+        return P(None, None, ax(shape[2], tp))
+    return P(*([None] * nd))
+
+
+def param_specs(abstract_params: Any, cfg: ArchConfig,
+                plan: PartitionPlan) -> Any:
+    """PartitionSpec pytree matching the parameter pytree."""
+
+    def walk(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        return _leaf_spec(plan, cfg, name or "", leaf)
+
+    return jax.tree_util.tree_map_with_path(walk, abstract_params)
+
+
+def opt_state_specs(abstract_opt: Any, p_specs: Any) -> Any:
+    """AdamW state mirrors the params: step replicated, mu/nu/master use
+    the param specs."""
+    import repro.optim.adamw as adamw
+    return adamw.OptState(
+        step=P(),
+        mu=p_specs, nu=p_specs, master=p_specs)
+
+
+def batch_specs(abstract_batch: Dict[str, Any],
+                plan: PartitionPlan) -> Dict[str, P]:
+    b_axes = plan.rules.batch_axes
+    out = {}
+    for k, v in abstract_batch.items():
+        spec = [b_axes] + [None] * (len(v.shape) - 1)
+        if v.shape[0] == 1 or not _divisible(v.shape[0], plan.mesh, b_axes):
+            spec[0] = None                      # batch-1 long-context cells
+        out[k] = P(*spec)
+    return out
+
+
+def cache_specs(abstract_cache: Dict[str, Any], cfg: ArchConfig,
+                plan: PartitionPlan) -> Dict[str, P]:
+    """KV caches sharded (layers, B, KH, S, hd): batch over data axes and
+    *sequence* over the model axis — the flash-decoding layout whose
+    partial-attention merge is the back-streaming protocol's producer task.
+    SSM states shard their head dim over the model axis."""
+    mesh, tp = plan.mesh, plan.tp
+    b_axes = plan.rules.batch_axes
+    out: Dict[str, P] = {}
+    for k, v in abstract_cache.items():
+        if k == "pos":
+            out[k] = P()
+            continue
+        shape = v.shape
+        batch_ax = b_axes if _divisible(shape[1], mesh, b_axes) else None
+        if k.startswith(("k", "v")) and not k.startswith("conv"):
+            seq_ax = tp if (tp and _divisible(shape[3], mesh, tp)) else None
+            out[k] = P(None, batch_ax, None, seq_ax, None)
+        elif k.startswith("cross_"):
+            out[k] = P(None, batch_ax, None, None, None)
+        elif k.startswith("conv"):
+            di_ax = tp if (tp and _divisible(shape[3], mesh, tp)) else None
+            out[k] = P(None, batch_ax, None, di_ax)
+        elif k.startswith("ssm"):
+            nh_ax = tp if (tp and _divisible(shape[2], mesh, tp)) else None
+            out[k] = P(None, batch_ax, nh_ax, None, None)
+        else:
+            out[k] = P(*([None] * len(shape)))
+    return out
+
+
+def to_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_plan(cfg: ArchConfig, rules: ShardingRules, *,
+              train: bool) -> PartitionPlan:
+    """FSDP policy: shard weights over the data axes when params would not
+    comfortably fit per chip under TP alone (16 GB HBM v5e).  Training
+    triples the pressure with the f32 AdamW state."""
+    n = cfg.n_params()
+    threshold = 5e9 if train else 60e9       # bytes headroom heuristics
+    return PartitionPlan(rules=rules, fsdp=n > threshold)

@@ -1,0 +1,59 @@
+"""jit-able train / prefill / serve steps shared by the dry-run, the
+training driver, and the serving driver."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.registry import get_model
+from repro.optim import adamw
+from repro.optim import compression
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, *,
+                    compress_grads: bool = False):
+    """(params, opt_state, comp_state, batch) ->
+       (params, opt_state, comp_state, metrics)."""
+    model = get_model(cfg)
+
+    def train_step(params, opt_state, comp_state, batch):
+        def loss(p):
+            return model.loss_fn(cfg, p, batch)
+
+        (loss_val, metrics), grads = jax.value_and_grad(
+            loss, has_aux=True)(params)
+        if compress_grads:
+            grads, comp_state = compression.compress_grads(grads, comp_state)
+        params, opt_state, opt_metrics = adamw.apply(
+            opt_cfg, params, grads, opt_state)
+        metrics = {**metrics, **opt_metrics, "loss": loss_val}
+        return params, opt_state, comp_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """(params, batch) -> logits — full-sequence forward (prefill shape)."""
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.logits_fn(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, *, greedy: bool = True):
+    """(params, cache, tokens) -> (next_tokens, logits, cache) — one decode
+    step with KV/SSM caches; this is what `decode_*`/`long_*` shapes lower."""
+    model = get_model(cfg)
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(cfg, params, cache, tokens)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+
+    return serve_step

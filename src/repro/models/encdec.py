@@ -1,0 +1,245 @@
+"""Whisper-style encoder-decoder.  The conv audio frontend is a stub: inputs
+arrive as precomputed frame embeddings (B, enc_len, D) per the assignment.
+
+The encoder is a bidirectional transformer; the decoder adds cross-attention
+to the encoder output.  Cross-attention is the paper's offload structure for
+enc-dec serving: the encoder output lives on the 'CCM side' and partial
+cross-attention results stream to the decoder (DESIGN.md SS4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def _init_cross(cfg: ArchConfig, key) -> Params:
+    p = T._init_attn(cfg, key)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    assert cfg.enc_dec
+    k_embed, k_enc, k_dec, k_cross = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    n_enc_blocks = cfg.n_enc_layers // len(cfg.block_pattern)
+    enc_keys = jax.random.split(k_enc, n_enc_blocks)
+    dec_keys = jax.random.split(k_dec, cfg.n_blocks)
+    cross_keys = jax.random.split(k_cross, cfg.n_blocks)
+    return {
+        "embed": (jax.random.normal(k_embed, (cfg.padded_vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dt),
+        "enc_blocks": jax.vmap(lambda k: T.init_block_params(cfg, k))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: T.init_block_params(cfg, k))(dec_keys),
+        "cross": jax.vmap(lambda k: _init_cross(cfg, k))(cross_keys),
+        "enc_final_ln": jnp.zeros((cfg.d_model,), dt),
+        "final_ln": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# Encoder
+# --------------------------------------------------------------------------
+
+def _enc_attn(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    q, k, v = T._qkv(cfg, p, x, positions)
+    o = L.blocked_attention(q, k, v, causal=False)
+    return x + o.reshape(b, s, -1) @ p["wo"]
+
+
+def encode(cfg: ArchConfig, params: Params, embeds: jax.Array,
+           *, remat: bool = True) -> jax.Array:
+    x = embeds.astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, "batch")
+
+    def body(x, bp):
+        for pos in range(len(cfg.block_pattern)):
+            p = bp[pos]
+            x = _enc_attn(cfg, p["attn"], x)
+            x, _ = T.ffn_layer(cfg, p["ffn"], x, False)
+            x = constrain(x, "batch")
+        return x
+
+    # W1 (§Perf): without remat the 32 encoder layers' activations are all
+    # saved for backward — 538 GB/chip peak at train_4k.
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def block(x, bp):
+        return body(x, bp), None
+
+    x, _ = lax.scan(block, x, params["enc_blocks"])
+    return L.rms_norm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# Decoder (train/prefill)
+# --------------------------------------------------------------------------
+
+def _cross_attn(cfg: ArchConfig, p: Params, x: jax.Array,
+                enc_out: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    hx = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (hx @ p["wq"]).reshape(b, s, h, hd)
+    k = (enc_out @ p["wk"]).reshape(b, enc_out.shape[1], kh, hd)
+    v = (enc_out @ p["wv"]).reshape(b, enc_out.shape[1], kh, hd)
+    o = L.blocked_attention(q, k, v, causal=False, block=500)
+    return x + o.reshape(b, s, -1) @ p["wo"]
+
+
+def decoder_forward(cfg: ArchConfig, params: Params, tokens: jax.Array,
+                    enc_out: jax.Array, *, remat: bool = True) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, inp):
+        bp, cross_p = inp
+        for pos, kind in enumerate(cfg.block_pattern):
+            p = bp[pos]
+            x = T.attn_layer(cfg, p["attn"], x, kind, positions)
+            x = _cross_attn(cfg, cross_p, x, enc_out)
+            x, _ = T.ffn_layer(cfg, p["ffn"], x, False)
+            x = constrain(x, "batch")
+        return x
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def block(x, inp):
+        return body(x, inp), None
+
+    x, _ = lax.scan(block, x, (params["dec_blocks"], params["cross"]))
+    return L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    enc_out = encode(cfg, params, batch["embeds"])
+    x = decoder_forward(cfg, params, batch["tokens"], enc_out)
+    ce = L.xent_loss_chunked(x, params["embed"], batch["labels"],
+                             vocab=cfg.vocab)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+def logits_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
+              ) -> jax.Array:
+    enc_out = encode(cfg, params, batch["embeds"])
+    x = decoder_forward(cfg, params, batch["tokens"], enc_out)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return constrain(logits, "logits")
+
+
+# --------------------------------------------------------------------------
+# Decode with caches
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
+               enc_len: int = 0) -> Dict[str, Any]:
+    """Self-attention KV cache + precomputed per-layer cross KV."""
+    cache = T.init_cache(cfg, batch_size, max_seq)
+    dt = jnp.dtype(cfg.dtype)
+    kh, hd = cfg.n_kv_heads, cfg.head_dim_
+    enc_len = enc_len or cfg.enc_len
+    cache["cross_k"] = jnp.zeros((cfg.n_blocks, batch_size, kh, enc_len, hd), dt)
+    cache["cross_v"] = jnp.zeros((cfg.n_blocks, batch_size, kh, enc_len, hd), dt)
+    return cache
+
+
+def abstract_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
+                   enc_len: int = 0) -> Dict[str, Any]:
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch_size, max_seq, enc_len))
+
+
+def prefill_cross_cache(cfg: ArchConfig, params: Params, enc_out: jax.Array,
+                        cache: Dict[str, Any]) -> Dict[str, Any]:
+    """Compute cross-attention K/V for every decoder layer from enc_out."""
+    kh, hd = cfg.n_kv_heads, cfg.head_dim_
+    b, e, _ = enc_out.shape
+
+    def per_block(cross_p):
+        k = (enc_out @ cross_p["wk"]).reshape(b, e, kh, hd).transpose(0, 2, 1, 3)
+        v = (enc_out @ cross_p["wv"]).reshape(b, e, kh, hd).transpose(0, 2, 1, 3)
+        return k, v
+
+    ks, vs = jax.vmap(per_block)(params["cross"])
+    out = dict(cache)
+    out["cross_k"], out["cross_v"] = ks, vs
+    return out
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
+                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decoder token against self-attn cache + cross KV cache.
+
+    As in the decoder-only path (SS Perf iteration D5), the scan reads all
+    caches as xs and emits only the tiny new-token self-attn K/V; the
+    (static) cross KV never round-trips through scan ys at all."""
+    from repro.core.backstream import (cache_update_stacked,
+                                       decode_attention_combined)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b = x.shape[0]
+    pos = cache["pos"]
+
+    cache_keys = sorted(k for k in cache if k != "pos")
+    xs_cache = {k: cache[k] for k in cache_keys}
+
+    def scan_body(x, inp):
+        bp, cross_p, blk_cache = inp
+        updates = {}
+        for pos_i, kind in enumerate(cfg.block_pattern):
+            p = bp[pos_i]
+            x, knew, vnew = T._decode_attn(
+                cfg, p["attn"], x, kind,
+                blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos)
+            updates[f"knew{pos_i}"] = knew
+            updates[f"vnew{pos_i}"] = vnew
+            # cross attention against the (static) encoder KV
+            hx = L.rms_norm(x, cross_p["ln"], cfg.norm_eps)
+            q = (hx @ cross_p["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim_)
+            enc_len = blk_cache["cross_k"].shape[2]
+            o = decode_attention_combined(
+                q, blk_cache["cross_k"], blk_cache["cross_v"],
+                jnp.asarray(enc_len - 1, jnp.int32), n_chunks=1)
+            x = x + o.reshape(b, 1, -1) @ cross_p["wo"]
+            x, _ = T.ffn_layer(cfg, p["ffn"], x, False)
+        return x, updates
+
+    x, ys = lax.scan(
+        scan_body, x, (params["dec_blocks"], params["cross"], xs_cache))
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+
+    out_cache: Dict[str, Any] = {"pos": pos + 1,
+                                 "cross_k": cache["cross_k"],
+                                 "cross_v": cache["cross_v"]}
+    for pos_i, kind in enumerate(cfg.block_pattern):
+        max_seq = cache[f"k{pos_i}"].shape[3]
+        slot = (pos % max_seq).astype(jnp.int32)
+        out_cache[f"k{pos_i}"] = cache_update_stacked(
+            cache[f"k{pos_i}"], ys[f"knew{pos_i}"], slot)
+        out_cache[f"v{pos_i}"] = cache_update_stacked(
+            cache[f"v{pos_i}"], ys[f"vnew{pos_i}"], slot)
+    return constrain(logits, "logits"), out_cache

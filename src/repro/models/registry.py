@@ -1,0 +1,29 @@
+"""Arch-id -> model functions dispatch (decoder-only vs encoder-decoder)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+from repro.models import encdec, transformer
+from repro.models.config import ArchConfig
+
+
+class ModelFns(NamedTuple):
+    init_params: Callable
+    abstract_params: Callable
+    loss_fn: Callable          # (cfg, params, batch) -> (loss, metrics)
+    logits_fn: Callable        # (cfg, params, batch) -> logits
+    init_cache: Callable
+    abstract_cache: Callable
+    decode_step: Callable      # (cfg, params, cache, tokens) -> (logits, cache)
+
+
+def get_model(cfg: ArchConfig) -> ModelFns:
+    if cfg.enc_dec:
+        return ModelFns(
+            encdec.init_params, encdec.abstract_params, encdec.loss_fn,
+            encdec.logits_fn, encdec.init_cache, encdec.abstract_cache,
+            encdec.decode_step)
+    return ModelFns(
+        transformer.init_params, transformer.abstract_params,
+        transformer.loss_fn, transformer.logits_fn, transformer.init_cache,
+        transformer.abstract_cache, transformer.decode_step)

@@ -1,0 +1,417 @@
+"""Decoder-only transformer (+ hybrid/SSM) model: init, train/prefill
+forward, and single-step decode with KV / SSM state caches.
+
+The layer stack is expressed as `n_blocks` repetitions of a static
+`block_pattern`, scanned with `lax.scan` over stacked parameters so the
+lowered HLO is depth-independent (essential for the 512-device dry-run of
+72-layer models on one CPU host).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+from repro.sharding import constrain
+
+Params = Dict[str, Any]
+AUX_LOSS_COEF = 0.01
+
+
+# --------------------------------------------------------------------------
+# Initialization
+# --------------------------------------------------------------------------
+
+def _init_attn(cfg: ArchConfig, key) -> Params:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ln": jnp.zeros((d,), dt),
+        "wq": (jax.random.normal(k1, (d, h * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, kh * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, kh * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * (h * hd) ** -0.5).astype(dt),
+    }
+
+
+def _init_ffn(cfg: ArchConfig, key, moe: bool) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if moe:
+        e = cfg.n_experts
+        return {
+            "ln": jnp.zeros((d,), dt),
+            "router": (jax.random.normal(k4, (d, e)) * d ** -0.5).astype(jnp.float32),
+            "w_gate": (jax.random.normal(k1, (e, d, f)) * d ** -0.5).astype(dt),
+            "w_up": (jax.random.normal(k2, (e, d, f)) * d ** -0.5).astype(dt),
+            "w_down": (jax.random.normal(k3, (e, f, d)) * f ** -0.5).astype(dt),
+        }
+    return {
+        "ln": jnp.zeros((d,), dt),
+        "w_gate": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(dt),
+        "w_up": (jax.random.normal(k2, (d, f)) * d ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(k3, (f, d)) * f ** -0.5).astype(dt),
+    }
+
+
+def _init_mamba(cfg: ArchConfig, key) -> Params:
+    d, di, n, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "ln": jnp.zeros((d,), dt),
+        "w_z": (jax.random.normal(ks[0], (d, di)) * s).astype(dt),
+        "w_x": (jax.random.normal(ks[1], (d, di)) * s).astype(dt),
+        "w_B": (jax.random.normal(ks[2], (d, n)) * s).astype(dt),
+        "w_C": (jax.random.normal(ks[3], (d, n)) * s).astype(dt),
+        "w_dt": (jax.random.normal(ks[4], (d, nh)) * s).astype(dt),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (cfg.conv_width, di))
+                   * cfg.conv_width ** -0.5).astype(dt),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) * di ** -0.5).astype(dt),
+    }
+
+
+def _is_moe_pos(cfg: ArchConfig, pos: int) -> bool:
+    return cfg.is_moe and (pos % cfg.moe_every == 0)
+
+
+def init_block_params(cfg: ArchConfig, key) -> Tuple[Params, ...]:
+    """Parameters for one block (one instance of the pattern)."""
+    out = []
+    for pos, kind in enumerate(cfg.block_pattern):
+        key, k1, k2 = jax.random.split(key, 3)
+        layer: Params = {}
+        if kind in ("full", "local"):
+            layer["attn"] = _init_attn(cfg, k1)
+        elif kind == "mamba":
+            layer["mamba"] = _init_mamba(cfg, k1)
+        if cfg.d_ff > 0:
+            layer["ffn"] = _init_ffn(cfg, k2, _is_moe_pos(cfg, pos))
+        out.append(layer)
+    return tuple(out)
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    key, ke, kb = jax.random.split(key, 3)
+    # stacked blocks: vmap the per-block init over n_blocks keys
+    block_keys = jax.random.split(kb, cfg.n_blocks)
+    blocks = jax.vmap(lambda k: init_block_params(cfg, k))(block_keys)
+    params: Params = {
+        "embed": (jax.random.normal(ke, (cfg.padded_vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dt),
+        "blocks": blocks,
+        "final_ln": jnp.zeros((cfg.d_model,), dt),
+    }
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    """Shape/dtype-only params (no allocation) for the dry-run."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# Layer applications
+# --------------------------------------------------------------------------
+
+def _qkv(cfg: ArchConfig, p: Params, x: jax.Array,
+         positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    hx = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (hx @ p["wq"]).reshape(b, s, h, hd)
+    k = (hx @ p["wk"]).reshape(b, s, kh, hd)
+    v = (hx @ p["wv"]).reshape(b, s, kh, hd)
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(positions[..., None], positions.shape + (3,))
+        q = L.apply_mrope(q, pos3, cfg.rope_theta, _mrope_sections(hd))
+        k = L.apply_mrope(k, pos3, cfg.rope_theta, _mrope_sections(hd))
+    else:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mrope_sections(hd: int) -> Tuple[int, int, int]:
+    half = hd // 2
+    t = half - 2 * (half // 4)
+    return (t, half // 4, half // 4)
+
+
+def attn_layer(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
+               positions: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = constrain(q, "attn_in")
+    k = constrain(k, "kv")
+    v = constrain(v, "kv")
+    if kind == "local" and s > cfg.sliding_window:
+        o = L.sliding_attention(q, k, v, window=cfg.sliding_window)
+    else:
+        o = L.blocked_attention(q, k, v, causal=True)
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim_)
+    return x + o @ p["wo"]
+
+
+def ffn_layer(cfg: ArchConfig, p: Params, x: jax.Array, moe: bool
+              ) -> Tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    hx = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    if moe:
+        flat = hx.reshape(b * s, d)
+        y = L.moe_ffn_dist(flat, p["router"], p["w_gate"], p["w_up"],
+                           p["w_down"], cfg.top_k)
+        aux = L.moe_aux_loss(flat, p["router"], cfg.top_k)
+        return x + y.reshape(b, s, d), aux
+    y = L.gated_mlp(hx, p["w_gate"], p["w_up"], p["w_down"])
+    return x + y, jnp.zeros((), jnp.float32)
+
+
+def mamba_layer(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    nh, hp = cfg.n_ssm_heads, cfg.ssm_head_dim
+    hx = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    z = jax.nn.silu(hx @ p["w_z"])
+    xc = hx @ p["w_x"]
+    xc, _ = L.causal_conv1d(xc, p["conv_w"])
+    Bm = hx @ p["w_B"]
+    Cm = hx @ p["w_C"]
+    dt = jax.nn.softplus((hx @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = L.ssd_chunked(xc.reshape(b, s, nh, hp), dt, A, Bm, Cm)
+    y = y + (xc.reshape(b, s, nh, hp)
+             * p["D"][None, None, :, None].astype(xc.dtype))
+    y = (y.reshape(b, s, -1) * z).astype(x.dtype)
+    return x + y @ p["out_proj"]
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _embed(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
+           ) -> jax.Array:
+    if "embeds" in batch:                        # vlm/audio stub frontends
+        return batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    return jnp.take(params["embed"], batch["tokens"], axis=0)
+
+
+def _block_fn(cfg: ArchConfig, x: jax.Array, block_params: Tuple[Params, ...],
+              positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    aux_total = jnp.zeros((), jnp.float32)
+    for pos, kind in enumerate(cfg.block_pattern):
+        p = block_params[pos]
+        if kind in ("full", "local"):
+            x = attn_layer(cfg, p["attn"], x, kind, positions)
+        elif kind == "mamba":
+            x = mamba_layer(cfg, p["mamba"], x)
+        if cfg.d_ff > 0:
+            x, aux = ffn_layer(cfg, p["ffn"], x, _is_moe_pos(cfg, pos))
+            aux_total = aux_total + aux
+        x = constrain(x, "batch")
+    return x, aux_total
+
+
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array],
+            *, remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Returns (final hidden states (B,S,D), total aux loss)."""
+    x = _embed(cfg, params, batch)
+    x = constrain(x, "batch")
+    b, s, _ = x.shape
+    positions = batch.get(
+        "positions",
+        jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s)))
+
+    body = functools.partial(_block_fn, cfg, positions=positions)
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_body(carry, block_params):
+        x = carry
+        x, aux = body(x, block_params)
+        return x, aux
+
+    x, auxes = lax.scan(scan_body, x, params["blocks"])
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return x, jnp.sum(auxes)
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x, aux = forward(cfg, params, batch)
+    ce = L.xent_loss_chunked(x, params["embed"], batch["labels"],
+                             vocab=cfg.vocab)
+    loss = ce + AUX_LOSS_COEF * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def logits_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
+              ) -> jax.Array:
+    """Full-sequence logits (prefill / evaluation path)."""
+    x, _ = forward(cfg, params, batch, remat=False)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return constrain(logits, "logits")
+
+
+# --------------------------------------------------------------------------
+# Decode: caches + single-token step
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CacheSpec:
+    """Cache layout for one pattern position across all blocks."""
+    kind: str
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
+               dtype: Optional[str] = None) -> Dict[str, Any]:
+    """Per-pattern-position caches stacked over n_blocks."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    nb, b = cfg.n_blocks, batch_size
+    kh, hd = cfg.n_kv_heads, cfg.head_dim_
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    for pos, kind in enumerate(cfg.block_pattern):
+        if kind in ("full", "local"):
+            # flash-decoding layout (B, KH, S, hd): contiguous (S, hd)
+            # panels per kv head — decode dots read the cache in place
+            # (§Perf iteration D2)
+            cache[f"k{pos}"] = jnp.zeros((nb, b, kh, max_seq, hd), dt)
+            cache[f"v{pos}"] = jnp.zeros((nb, b, kh, max_seq, hd), dt)
+        elif kind == "mamba":
+            cache[f"conv{pos}"] = jnp.zeros(
+                (nb, b, cfg.conv_width - 1, cfg.d_inner), dt)
+            cache[f"ssm{pos}"] = jnp.zeros(
+                (nb, b, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32)
+    return cache
+
+
+def abstract_cache(cfg: ArchConfig, batch_size: int, max_seq: int
+                   ) -> Dict[str, Any]:
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch_size, max_seq))
+
+
+def _decode_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
+                 k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array,
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention against the cache.  The cache is sharded over the
+    sequence axis (flash-decoding): each shard produces a partial-softmax
+    result that is merged - the back-streaming integration point (see
+    repro.core.backstream.decode_attention_combined).
+
+    The cache is READ-ONLY here (§Perf iteration D5): the current token's
+    contribution is merged as one extra partial (its KV has not been
+    written yet), and the returned (k_new, v_new) are ring-slot-written
+    for all layers at once OUTSIDE the layer scan — so the scan never
+    re-stacks full cache slices.  Returns (x, k_new, v_new) with
+    k_new/v_new in cache layout (B, KH, 1, hd)."""
+    from repro.core.backstream import decode_attention_combined
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    q, k_new, v_new = _qkv(cfg, p, x, positions)
+    extra = L.single_kv_partial(q, k_new, v_new)
+    window = cfg.sliding_window if kind == "local" else 0
+    # cache holds tokens [0, pos); the current token arrives via `extra`
+    o = decode_attention_combined(q, k_cache, v_cache, pos - 1,
+                                  window=max(0, window - 1), extra=extra)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim_)
+    return (x + o @ p["wo"], k_new.transpose(0, 2, 1, 3),
+            v_new.transpose(0, 2, 1, 3))
+
+
+def _decode_mamba(cfg: ArchConfig, p: Params, x: jax.Array,
+                  conv_state: jax.Array, ssm_state: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b = x.shape[0]
+    nh, hp = cfg.n_ssm_heads, cfg.ssm_head_dim
+    hx = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    z = jax.nn.silu(hx @ p["w_z"])
+    xc = hx @ p["w_x"]
+    xc, conv_state = L.causal_conv1d(xc, p["conv_w"], conv_state)
+    Bm = (hx @ p["w_B"])[:, 0]
+    Cm = (hx @ p["w_C"])[:, 0]
+    dt = jax.nn.softplus((hx @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])[:, 0]
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = L.ssd_decode_step(
+        ssm_state, xc[:, 0].reshape(b, nh, hp), dt, A, Bm, Cm)
+    y = y + (xc[:, 0].reshape(b, nh, hp)
+             * p["D"][None, :, None].astype(xc.dtype))
+    y = (y.reshape(b, 1, -1) * z).astype(x.dtype)
+    return x + y @ p["out_proj"], conv_state, ssm_state
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
+                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decoding step.  tokens: (B, 1) int32 (or embeds (B,1,D)).
+    Returns (logits (B, 1, V), updated cache).
+
+    KV caches pass through the layer scan READ-ONLY (xs); the scan emits
+    only the per-layer new-token K/V (tiny), which are ring-slot-written
+    into the stacked caches in ONE sharded update per cache after the
+    scan (§Perf iteration D5) — the scan never re-stacks cache slices."""
+    from repro.core.backstream import cache_update_stacked
+    if tokens.ndim == 3:
+        x = tokens.astype(jnp.dtype(cfg.dtype))
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    pos = cache["pos"]
+
+    cache_keys = sorted(k for k in cache if k != "pos")
+    xs = {k: cache[k] for k in cache_keys}
+
+    def scan_body(x, inp):
+        block_params, blk_cache = inp
+        updates = {}
+        for pos_i, kind in enumerate(cfg.block_pattern):
+            p = block_params[pos_i]
+            if kind in ("full", "local"):
+                x, knew, vnew = _decode_attn(
+                    cfg, p["attn"], x, kind,
+                    blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos)
+                updates[f"knew{pos_i}"] = knew
+                updates[f"vnew{pos_i}"] = vnew
+            elif kind == "mamba":
+                x, cnew, snew = _decode_mamba(
+                    cfg, p["mamba"], x,
+                    blk_cache[f"conv{pos_i}"], blk_cache[f"ssm{pos_i}"])
+                updates[f"conv{pos_i}"] = cnew
+                updates[f"ssm{pos_i}"] = snew
+            if cfg.d_ff > 0:
+                x, _ = ffn_layer(cfg, p["ffn"], x, _is_moe_pos(cfg, pos_i))
+        return x, updates
+
+    x, ys = lax.scan(scan_body, x, (params["blocks"], xs))
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+
+    out_cache: Dict[str, Any] = {"pos": pos + 1}
+    for pos_i, kind in enumerate(cfg.block_pattern):
+        if kind in ("full", "local"):
+            max_seq = cache[f"k{pos_i}"].shape[3]
+            slot = (pos % max_seq).astype(jnp.int32)
+            out_cache[f"k{pos_i}"] = cache_update_stacked(
+                cache[f"k{pos_i}"], ys[f"knew{pos_i}"], slot)
+            out_cache[f"v{pos_i}"] = cache_update_stacked(
+                cache[f"v{pos_i}"], ys[f"vnew{pos_i}"], slot)
+        elif kind == "mamba":
+            out_cache[f"conv{pos_i}"] = ys[f"conv{pos_i}"]
+            out_cache[f"ssm{pos_i}"] = ys[f"ssm{pos_i}"]
+    return constrain(logits, "logits"), out_cache

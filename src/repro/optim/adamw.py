@@ -1,0 +1,104 @@
+"""AdamW with global-norm clipping, bf16-params / f32-master layout, and
+optional int8 error-feedback gradient compression (see compression.py).
+
+No optax dependency: the whole state is a pytree mirroring the params, so
+it pjit-shards with the same PartitionSpecs (FSDP over ("pod","data") for
+the large archs) and round-trips through the checkpoint layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array      # scalar int32
+    mu: Any              # f32 pytree like params
+    nu: Any              # f32 pytree like params
+    master: Any          # f32 master copy of (bf16) params
+
+
+def init(params: Any) -> OptState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+    )
+
+
+def abstract_state(params: Any) -> OptState:
+    return jax.eval_shape(init, params)
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply(cfg: AdamWConfig, params: Any, grads: Any, state: OptState
+          ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW update.  Returns (new params in the params' dtype, new
+    state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = schedule(cfg, state.step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        master = master - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                                + cfg.weight_decay * master)
+        return mu, nu, master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    flat_ma = jax.tree.leaves(state.master)
+    new_mu, new_nu, new_ma = [], [], []
+    for g, mu, nu, ma in zip(flat_g, flat_mu, flat_nu, flat_ma):
+        mu, nu, ma = upd(g, mu, nu, ma)
+        new_mu.append(mu)
+        new_nu.append(nu)
+        new_ma.append(ma)
+    dtypes = [p.dtype for p in jax.tree.leaves(params)]
+    new_params = treedef.unflatten(
+        [m.astype(dt) for m, dt in zip(new_ma, dtypes)])
+    new_state = OptState(step,
+                         treedef.unflatten(new_mu),
+                         treedef.unflatten(new_nu),
+                         treedef.unflatten(new_ma))
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,66 @@
+"""Int8 error-feedback gradient compression for the data-parallel
+all-reduce (distributed-optimization trick, DESIGN.md §5).
+
+Per-tensor symmetric int8 quantization with an error-feedback residual:
+the quantization error of step t is added back to the gradient of step
+t+1, so the compression bias telescopes away and convergence matches the
+uncompressed optimizer to first order (Karimireddy et al., 2019).
+
+Wire format per tensor: int8 payload (4× smaller than f32, 2× smaller
+than bf16 on the all-reduce) + one f32 scale.  Compression is applied
+*before* the pjit-inserted gradient all-reduce by quantize/dequantize
+around the loss-grad — under GSPMD the all-reduce then runs on the int8
+values' dequantized form; on real fleets the int8 payload rides the wire
+(custom collective), here we model the numerics exactly and count the
+byte savings in the roofline's collective term.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any        # f32 pytree like grads (error feedback memory)
+
+
+def init(params: Any) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params))
+
+
+def abstract_state(params: Any) -> CompressionState:
+    return jax.eval_shape(init, params)
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads: Any, state: CompressionState
+                   ) -> Tuple[Any, CompressionState]:
+    """Quantize (grad + residual) to int8, return the dequantized gradient
+    that the all-reduce / optimizer sees and the new residual."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, scale = _quantize(gf)
+        deq = q.astype(jnp.float32) * scale
+        return deq, gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(state.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    deq = treedef.unflatten([o[0] for o in outs])
+    res = treedef.unflatten([o[1] for o in outs])
+    return deq, CompressionState(residual=res)
+
+
+def compressed_bytes(grads: Any) -> int:
+    """Wire bytes of the int8-compressed gradient (payload + scales)."""
+    return sum(x.size + 4 for x in jax.tree.leaves(grads))

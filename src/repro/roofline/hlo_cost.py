@@ -1,0 +1,430 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's `compiled.cost_analysis()` counts a `while` body ONCE, regardless of
+trip count — for a depth-N `lax.scan` transformer that under-counts FLOPs,
+bytes, and collectives by ~N×.  The optimized HLO text, however, annotates
+every loop with `backend_config={"known_trip_count":{"n":"N"}}`.  This
+module parses the computation call graph and rolls costs up from ENTRY,
+multiplying loop bodies by their trip counts:
+
+  FLOPs       — 2·prod(result)·prod(contracting) per dot (dots dominate;
+                elementwise FLOPs are ignored, which keeps the number
+                comparable to the 6·N·D model-FLOPs convention).
+  bytes       — HBM traffic under an *ideal-fusion TPU memory model*:
+                elementwise / broadcast / convert / reshape chains fuse
+                into their consumers (CPU-lowered HLO leaves them as
+                individual instructions, which would over-count TPU
+                traffic ~45×); only dot, reduce(-window), data-reshuffle
+                (transpose/copy/concat/slice/pad/sort/gather/scatter),
+                RNG and collective results materialize.  Reads are the
+                "fusion frontier" of each materializing op — the set of
+                materialized tensors reachable through fusible producers.
+                dynamic-slice / dynamic-update-slice count 2× the bytes
+                of the *touched slice* (in-place on TPU), not the full
+                operand.
+  collectives — result bytes per all-gather / all-reduce / reduce-scatter
+                / all-to-all / collective-permute, by op kind.
+
+The parser is deliberately line-based: optimized HLO prints one
+instruction per line, computations start at column 0 with `%name (` or
+`ENTRY`, and end with a column-0 `}`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "s16": 2, "s32": 4, "s64": 8,
+    "u2": 1, "u4": 1, "u8": 1, "u16": 2, "u32": 4, "u64": 8,
+    "f4e2m1fn": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "f8e8m0fnu": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\(")
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=(%[\w.\-]+)")
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(")
+
+# Ops whose operands/results do not represent HBM traffic.
+_NO_MEM_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "custom-call"}
+_CONTROL_OPS = {"while", "conditional", "call"}
+
+# Ops that fuse into their consumer on TPU: their results never hit HBM.
+_FUSIBLE_OPS = {
+    "add", "subtract", "multiply", "divide", "negate", "abs", "sign",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "power", "remainder", "atan2",
+    "maximum", "minimum", "clamp", "select", "compare", "and", "or", "xor",
+    "not", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "convert", "bitcast-convert", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "is-finite", "sine", "cosine", "tan", "erf",
+    "real", "imag", "broadcast", "reshape", "iota", "map", "expm1",
+    "log1p", "popcnt", "clz", "stochastic-convert", "reduce-precision",
+    "bitcast",
+}
+# Generators: fusible with an empty read frontier.
+_SOURCE_OPS = {"iota", "constant", "rng", "rng-bit-generator"}
+
+
+def _parse_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _parse_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape_str: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    instrs: List[_Instr]
+
+
+def _split_computations(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line[0] in "%E" and (m := _COMP_START_RE.match(line)):
+            cur = _Computation(m.group(1), [])
+            comps[cur.name] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        dm = _DEF_RE.match(line)
+        if dm:
+            cur.instrs.append(_Instr(dm.group(1), dm.group(2),
+                                     dm.group(3), line))
+    return comps
+
+
+def _operand_split(paren_body: str) -> List[str]:
+    """Split the top-level operand list on commas at depth 0."""
+    out, depth, cur = [], 0, []
+    for ch in paren_body:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+def _operands(line: str, op: str) -> List[str]:
+    i = line.find(op + "(")
+    if i < 0:
+        return []
+    start = i + len(op) + 1
+    depth = 1
+    j = start
+    while j < len(line) and depth:
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+        j += 1
+    return _operand_split(line[start:j - 1])
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: Optional[Dict[str, float]] = None
+
+    def __add__(self, o: "Cost") -> "Cost":
+        by = dict(self.coll_by_op or {})
+        for k, v in (o.coll_by_op or {}).items():
+            by[k] = by.get(k, 0.0) + v
+        return Cost(self.flops + o.flops, self.bytes + o.bytes,
+                    self.coll_bytes + o.coll_bytes, by)
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m, self.coll_bytes * m,
+                    {k: v * m for k, v in (self.coll_by_op or {}).items()})
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = _split_computations(text)
+        self._memo: Dict[str, Cost] = {}
+        self.entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_START_RE.match(line[6:].strip())
+                if m:
+                    self.entry = m.group(1)
+        if self.entry is None:           # fall back: last computation
+            self.entry = list(self.comps)[-1] if self.comps else None
+
+    # -- per-instruction local costs ---------------------------------------
+    def _dot_flops(self, comp: _Computation, ins: _Instr,
+                   shapes: Dict[str, str]) -> float:
+        res_elems = 0
+        for _, dims in _parse_dims(ins.shape_str):
+            n = 1
+            for d in dims:
+                n *= d
+            res_elems += n
+        ops = _operands(ins.line, ins.op)
+        if not ops:
+            return 0.0
+        lhs = ops[0].split()[-1]
+        lhs_shape = shapes.get(lhs, "")
+        parsed = _parse_dims(lhs_shape)
+        if not parsed:
+            return 0.0
+        _, lhs_dims = parsed[0]
+        m = _LHS_CONTRACT_RE.search(ins.line)
+        k = 1
+        if m:
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    k *= lhs_dims[int(idx)]
+        return 2.0 * res_elems * k
+
+    def _fusion_slice_traffic(self, ins: _Instr):
+        """Slice-aware traffic for a fusion whose interior contains
+        dynamic-slice / dynamic-update-slice (XLA fuses the per-layer
+        weight/cache slicing of a lax.scan into its consumers).
+
+        Returns (bytes, excluded_param_positions) or None when the interior
+        has no slicing ops.  Bytes counted:
+          · interior dynamic-slice: 2× slice-result bytes (read the touched
+            panel; it flows on inside the fused kernel);
+          · interior dynamic-update-slice: 2× update bytes (in-place write
+            to the aliased buffer);
+        and the fusion operands *feeding those ops' big buffers* are
+        excluded from the caller's frontier-read accounting."""
+        m = _CALLS_RE.search(ins.line)
+        comp = self.comps.get(m.group(1)) if m else None
+        if comp is None:
+            return None
+        shapes = {i.name: i.shape_str for i in comp.instrs}
+        param_pos: Dict[str, int] = {}
+        for i in comp.instrs:
+            if i.op == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", i.line)
+                if pm:
+                    param_pos[i.name] = int(pm.group(1))
+        total = 0.0
+        excluded = set()
+        found = False
+        for i in comp.instrs:
+            if i.op == "dynamic-slice":
+                found = True
+                total += 2.0 * _shape_bytes(i.shape_str)
+                ops = _operands(i.line, i.op)
+                if ops:
+                    nm = ops[0].split()[-1]
+                    if nm in param_pos:
+                        excluded.add(param_pos[nm])
+            elif i.op == "dynamic-update-slice":
+                found = True
+                ops = _operands(i.line, i.op)
+                if len(ops) > 1:
+                    upd = ops[1].split()[-1]
+                    total += 2.0 * _shape_bytes(shapes.get(upd, ""))
+                    nm = ops[0].split()[-1]
+                    if nm in param_pos:
+                        excluded.add(param_pos[nm])
+        return (total, excluded) if found else None
+
+    def _fusion_is_elementwise(self, name: str) -> bool:
+        comp = self.comps.get(name)
+        if comp is None:
+            return False
+        return all(i.op in _FUSIBLE_OPS or i.op in _NO_MEM_OPS
+                   for i in comp.instrs)
+
+    def _local(self, comp: _Computation) -> Cost:
+        shapes = {i.name: i.shape_str for i in comp.instrs}
+        defs = {i.name: i for i in comp.instrs}
+        frontier_memo: Dict[str, frozenset] = {}
+
+        def op_names(ins: _Instr) -> List[str]:
+            out = []
+            for o in _operands(ins.line, ins.op):
+                nm = o.split()[-1]
+                if nm in defs:
+                    out.append(nm)
+            return out
+
+        def is_transparent(ins: _Instr) -> bool:
+            if ins.op in _FUSIBLE_OPS:
+                return True
+            if ins.op == "get-tuple-element":
+                return False                 # loop carries live in HBM
+            if ins.op == "fusion":
+                m = _CALLS_RE.search(ins.line)
+                return bool(m) and self._fusion_is_elementwise(m.group(1))
+            return False
+
+        def frontier(name: str, depth: int = 0) -> frozenset:
+            """Materialized tensors read when `name` is consumed by a
+            materializing op, walking through fusible producers."""
+            if name in frontier_memo:
+                return frontier_memo[name]
+            ins = defs.get(name)
+            if ins is None:
+                return frozenset()
+            if ins.op in _SOURCE_OPS or ins.op == "constant":
+                out = frozenset()
+            elif is_transparent(ins) and depth < 64:
+                out = frozenset()
+                for nm in op_names(ins):
+                    out |= frontier(nm, depth + 1)
+            else:
+                out = frozenset([name])
+            frontier_memo[name] = out
+            return out
+
+        c = Cost(coll_by_op={})
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "dot":
+                c.flops += self._dot_flops(comp, ins, shapes)
+            if op in _NO_MEM_OPS or op in _CONTROL_OPS:
+                continue
+            if is_transparent(ins) or op in _SOURCE_OPS:
+                continue                     # fuses into its consumer
+            if op == "fusion" and (st := self._fusion_slice_traffic(ins)) \
+                    is not None:
+                slice_bytes, excluded = st
+                b = slice_bytes
+                opnds = op_names(ins)
+                reads: frozenset = frozenset()
+                for pos_i, nm in enumerate(opnds):
+                    if pos_i in excluded:
+                        continue
+                    reads |= frontier(nm)
+                b += sum(_shape_bytes(shapes[nm]) for nm in reads)
+                # DUS-rooted fusions write in place (no full-result write);
+                # slice-read fusions still write their (small) result.
+                root_dus = any(i.op == "dynamic-update-slice"
+                               for i in self.comps.get(
+                                   _CALLS_RE.search(ins.line).group(1)).instrs)
+                if not root_dus:
+                    b += _shape_bytes(ins.shape_str)
+                c.bytes += b
+            elif op in ("dynamic-slice", "gather"):
+                c.bytes += 2.0 * _shape_bytes(ins.shape_str)
+            elif op == "dynamic-update-slice":
+                opnds = op_names(ins)
+                upd = shapes.get(opnds[1], "") if len(opnds) > 1 else ""
+                c.bytes += 2.0 * _shape_bytes(upd)
+            elif op == "scatter":
+                opnds = op_names(ins)
+                upd = shapes.get(opnds[-1], "") if opnds else ""
+                c.bytes += 2.0 * _shape_bytes(upd)
+            else:
+                # result write + fusion-frontier reads (deduplicated)
+                b = _shape_bytes(ins.shape_str)
+                reads: frozenset = frozenset()
+                for nm in op_names(ins):
+                    reads |= frontier(nm)
+                b += sum(_shape_bytes(shapes[nm]) for nm in reads)
+                c.bytes += b
+            base = op
+            for suffix in ("-start", "-done"):
+                if base.endswith(suffix):
+                    base = base[:-len(suffix)]
+            if base in COLLECTIVE_KINDS and not op.endswith("-done"):
+                rb = _shape_bytes(ins.shape_str)
+                c.coll_bytes += rb
+                c.coll_by_op[base] = c.coll_by_op.get(base, 0.0) + rb
+        return c
+
+    # -- roll-up ---------------------------------------------------------------
+    def cost_of(self, name: str, _stack=()) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        if comp is None or name in _stack:
+            return Cost(coll_by_op={})
+        total = self._local(comp)
+        stack = _stack + (name,)
+        for ins in comp.instrs:
+            if ins.op == "while":
+                trip = 1
+                if (m := _TRIP_RE.search(ins.line)):
+                    trip = int(m.group(1))
+                body = _BODY_RE.search(ins.line)
+                cond = _COND_RE.search(ins.line)
+                if body:
+                    total = total + self.cost_of(body.group(1), stack).scaled(trip)
+                if cond:
+                    total = total + self.cost_of(cond.group(1), stack).scaled(trip + 1)
+            elif ins.op == "conditional":
+                if (m := _BRANCHES_RE.search(ins.line)):
+                    branches = [b.strip() for b in m.group(1).split(",")]
+                    costs = [self.cost_of(b, stack) for b in branches if b]
+                    if costs:                       # worst-case branch
+                        total = total + max(costs, key=lambda c: c.flops + c.bytes)
+            else:
+                for rex in (_CALLS_RE, _TO_APPLY_RE):
+                    if (m := rex.search(ins.line)):
+                        callee = self.cost_of(m.group(1), stack)
+                        # Fusion interiors / reduction lambdas don't touch
+                        # HBM — the fusion boundary bytes were counted at
+                        # the call site.  Keep flops + collectives.
+                        callee = Cost(callee.flops, 0.0, callee.coll_bytes,
+                                      callee.coll_by_op)
+                        total = total + callee
+        self._memo[name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost(coll_by_op={})
+        return self.cost_of(self.entry)
+
+
+def analyze_text(text: str) -> Cost:
+    return HloCostModel(text).entry_cost()

@@ -1,0 +1,111 @@
+"""Sharding rules: logical axis names -> mesh axes, and a constraint API the
+model code can call without knowing whether a mesh is active.
+
+Mesh axes (launch/mesh.py):
+  single pod : ("data", "model")            16 x 16
+  multi-pod  : ("pod", "data", "model")     2 x 16 x 16
+
+Logical activation/parameter axes:
+  batch   -> ("pod","data")   (or ("data",) on a single pod)
+  seq     -> "model" when the arch uses sequence-parallel attention
+  tp      -> "model"          (FFN hidden, attention heads, vocab, experts)
+  fsdp    -> ("pod","data")   (parameter sharding for the very large archs)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+class ShardingRules:
+    """Resolves logical axis names against the active mesh's axis names."""
+
+    def __init__(self, mesh, *, seq_shard_attn: bool = False,
+                 fsdp: bool = False, seq_shard_acts: bool = False):
+        self.mesh = mesh
+        axis_names = mesh.axis_names
+        self.batch_axes: Tuple[str, ...] = tuple(
+            a for a in ("pod", "data") if a in axis_names)
+        self.model_axis: Optional[str] = "model" if "model" in axis_names else None
+        self.seq_shard_attn = seq_shard_attn
+        # Sequence parallelism for the training residual stream (§Perf W3):
+        # the (B,S,D) activations — and with them the per-layer remat
+        # carries saved for backward — shard S over the model axis.
+        self.seq_shard_acts = seq_shard_acts
+        self.fsdp = fsdp
+
+    # -- activation specs ------------------------------------------------------
+    def act_btd(self) -> P:          # (B, S, D)
+        return P(self.batch_axes, None, None)
+
+    def act_btd_seq(self) -> P:      # (B, S, D) with sequence sharding
+        return P(self.batch_axes, self.model_axis, None)
+
+    def act_bthd_heads(self) -> P:   # (B, S, H, hd) head-sharded
+        return P(self.batch_axes, None, self.model_axis, None)
+
+    def act_bthd_seq(self) -> P:     # (B, S, H, hd) sequence-sharded
+        return P(self.batch_axes, self.model_axis, None, None)
+
+    def kv_cache_seq(self) -> P:     # (layers, B, S, KH, hd): shard sequence
+        return P(None, self.batch_axes, self.model_axis, None, None)
+
+    def logits_btv(self) -> P:       # (B, S, V) vocab-sharded
+        return P(self.batch_axes, None, self.model_axis)
+
+
+_state = threading.local()
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """Apply a named sharding constraint if rules are active, else no-op.
+
+    kinds: 'batch' (B,S,D), 'attn_in' (B,S,H,hd), 'kv' (B,S,KH,hd),
+           'logits' (B,S,V).
+    """
+    rules = active_rules()
+    if rules is None:
+        return x
+    if kind == "batch":
+        n_model = (rules.mesh.shape[rules.model_axis]
+                   if rules.model_axis else 1)
+        if (rules.seq_shard_acts and rules.model_axis
+                and x.ndim >= 2 and x.shape[1] % n_model == 0
+                and x.shape[1] >= n_model):
+            spec = rules.act_btd_seq()
+        else:
+            spec = rules.act_btd()
+    elif kind == "batch_seq":
+        spec = (rules.act_btd_seq() if rules.seq_shard_attn
+                else rules.act_btd())
+    elif kind == "attn_in":
+        spec = (rules.act_bthd_seq() if rules.seq_shard_attn
+                else rules.act_bthd_heads())
+    elif kind == "kv":
+        # KV replicated across model axis under head-sharded attention (GQA
+        # heads are few); sequence-sharded under SP attention.
+        spec = (rules.act_bthd_seq() if rules.seq_shard_attn
+                else P(rules.batch_axes, None, None, None))
+    elif kind == "logits":
+        spec = rules.logits_btv()
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, spec)

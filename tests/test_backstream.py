@@ -1,0 +1,153 @@
+"""The back-streaming protocol as a collective schedule: every protocol
+must produce identical values (schedules differ, results don't)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backstream import (OffloadConfig, OffloadProtocol,
+                                   decode_attention_combined,
+                                   stream_offload, use_offload)
+from repro.kernels import ref
+from repro.models import layers as L
+
+
+def test_stream_offload_protocol_equivalence():
+    """BS / RP / AXLE fold the same partials to the same result."""
+    data = jax.random.normal(jax.random.key(0), (8, 16))
+
+    def producer(i):
+        return data[i] * 2.0
+
+    def consumer(carry, p):
+        return carry + jnp.sum(p ** 2)
+
+    outs = {}
+    for proto in OffloadProtocol:
+        with use_offload(OffloadConfig(protocol=proto, ring_depth=3)):
+            outs[proto] = float(stream_offload(
+                producer, consumer, jnp.zeros(()), 8, protocol=proto))
+    want = float(jnp.sum((data * 2.0) ** 2))
+    for proto, got in outs.items():
+        assert got == pytest.approx(want, rel=1e-5), proto
+
+
+def test_stream_offload_order_sensitive_consumer():
+    """AXLE's pipelined schedule must preserve consumption ORDER (the
+    OoO ring reorders transport, not consumption)."""
+    def producer(i):
+        return i.astype(jnp.float32)
+
+    def consumer(carry, p):
+        return carry * 2.0 + p          # order-sensitive fold
+
+    outs = []
+    for proto in OffloadProtocol:
+        with use_offload(OffloadConfig(protocol=proto, ring_depth=2)):
+            outs.append(float(stream_offload(
+                producer, consumer, jnp.zeros(()), 6, protocol=proto)))
+    assert len(set(np.round(outs, 5))) == 1, outs
+
+
+@pytest.mark.parametrize("n_chunks", [1, 2, 8])
+@pytest.mark.parametrize("pos_frac", [1.0, 0.4])
+def test_decode_attention_chunked_vs_full(n_chunks, pos_frac):
+    b, s, h, kh, hd = 2, 64, 4, 2, 16
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kh, hd))
+    v = jax.random.normal(ks[2], (b, s, kh, hd))
+    pos = jnp.asarray(int(s * pos_frac) - 1, jnp.int32)
+    kc = k.transpose(0, 2, 1, 3)            # (B,KH,S,hd) cache layout
+    vc = v.transpose(0, 2, 1, 3)
+    with use_offload(OffloadConfig(protocol=OffloadProtocol.BS)):
+        out = decode_attention_combined(q, kc, vc, pos, n_chunks=n_chunks)
+    # oracle: masked softmax over valid positions
+    valid = jnp.arange(s) <= pos
+    acc, m, l = ref.decode_partial_reference(
+        q, kc, vc, jnp.broadcast_to(valid[None], (b, s)))
+    want = (acc / l[..., None])[:, None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_decode_attention_sliding_window():
+    b, s, h, hd, w = 1, 64, 2, 16, 16
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    pos = jnp.asarray(s - 1, jnp.int32)
+    kc = k.transpose(0, 2, 1, 3)
+    vc = v.transpose(0, 2, 1, 3)
+    with use_offload(OffloadConfig(protocol=OffloadProtocol.BS)):
+        out = decode_attention_combined(q, kc, vc, pos, window=w, n_chunks=4)
+    valid = (jnp.arange(s) <= pos) & (jnp.arange(s) > pos - w)
+    acc, m, l = ref.decode_partial_reference(
+        q, kc, vc, jnp.broadcast_to(valid[None], (b, s)))
+    want = (acc / l[..., None])[:, None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_merge_partials_is_order_invariant():
+    """OoO streaming contract: merging partial (acc,m,l) statistics in any
+    arrival order gives the same softmax — what lets AXLE stream results
+    out of order while the host consumes them in any schedule."""
+    b, c, h, kh, hd = 1, 96, 4, 2, 16
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    k = jax.random.normal(ks[1], (b, kh, c, hd))
+    v = jax.random.normal(ks[2], (b, kh, c, hd))
+    valid = jnp.ones((b, c), bool)
+    parts = []
+    for i in range(3):
+        sl = slice(i * 32, (i + 1) * 32)
+        parts.append(ref.decode_partial_reference(
+            q, k[:, :, sl], v[:, :, sl], valid[:, sl]))
+
+    def merge(order):
+        accs = jnp.stack([parts[i][0] for i in order])
+        ms = jnp.stack([parts[i][1] for i in order])
+        ls = jnp.stack([parts[i][2] for i in order])
+        return L.merge_attention_partials(accs, ms, ls)
+
+    a = merge([0, 1, 2])
+    for order in ([2, 0, 1], [1, 2, 0], [2, 1, 0]):
+        np.testing.assert_allclose(np.asarray(merge(order)), np.asarray(a),
+                                   atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch_id", ["starcoder2_3b", "mistral_nemo_12b",
+                                     "gemma3_12b", "whisper_large_v3"])
+def test_decode_matches_prefill_logits(arch_id):
+    """Token-by-token decode (read-only cache + extra-partial merge, §Perf
+    D5) must reproduce the teacher-forced prefill logits."""
+    from repro.configs import get_smoke_config
+    from repro.models.registry import get_model
+    import numpy as np
+
+    cfg = get_smoke_config(arch_id)
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.key(0))
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.key(1), (b, s), 1, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.enc_dec:
+        emb = jax.random.normal(jax.random.key(2), (b, s, cfg.d_model))
+        batch["embeds"] = emb
+    full = model.logits_fn(cfg, params, batch)          # (B,S,V)
+
+    cache = model.init_cache(cfg, b, s)
+    if cfg.enc_dec:
+        from repro.models import encdec
+        enc_out = encdec.encode(cfg, params, emb)
+        cache = encdec.prefill_cross_cache(cfg, params, enc_out, cache)
+    outs = []
+    for i in range(s):
+        logits, cache = model.decode_step(cfg, params, cache, toks[:, i:i+1])
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               atol=5e-2, rtol=5e-2)

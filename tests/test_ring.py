@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) of the gap-aware ring-buffer index
+algebra — the paper's §IV-C memory-correctness invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ring
+
+
+def _consume_sequence(capacity, order):
+    """Apply an OoO consume order; return ring states after each step."""
+    r = ring.make_ring(capacity)
+    r, start = ring.allocate(r, jnp.asarray(len(order), jnp.int32))
+    states = [r]
+    for idx in order:
+        r = ring.consume(r, jnp.asarray(idx, jnp.int32))
+        states.append(r)
+    return states
+
+
+@given(st.integers(2, 16).flatmap(
+    lambda cap: st.permutations(list(range(cap)))))
+@settings(max_examples=40, deadline=None)
+def test_ooo_consume_head_advances_over_contiguous_prefix(order):
+    cap = len(order)
+    states = _consume_sequence(cap, order)
+    consumed = set()
+    for idx, st_ in zip(order, states[1:]):
+        consumed.add(idx)
+        # gap-aware head: max contiguous consumed prefix
+        head = 0
+        while head in consumed:
+            head += 1
+        assert int(st_.head) == head
+        assert bool(ring.invariants_ok(st_))
+    assert int(states[-1].head) == cap       # everything consumed
+
+
+@given(st.integers(1, 64), st.integers(0, 80))
+@settings(max_examples=40, deadline=None)
+def test_producer_credits_conservative(capacity, n_alloc):
+    """The producer's stale-head credit view never allows overwrite."""
+    r = ring.make_ring(capacity)
+    n = jnp.asarray(min(n_alloc, capacity), jnp.int32)
+    assert bool(ring.can_allocate(r, n))
+    r, _ = ring.allocate(r, n)
+    # without flow-control updates, free slots shrink exactly by n
+    assert int(ring.free_slots_producer(r)) == capacity - int(n)
+    # consuming without flow control does NOT restore producer credits
+    if int(n) > 0:
+        r = ring.consume(r, jnp.asarray(0, jnp.int32))
+        assert int(ring.free_slots_producer(r)) == capacity - int(n)
+        # ... the flow-control store does
+        r = ring.flow_control_update(r)
+        assert int(ring.free_slots_producer(r)) == capacity - int(n) + 1
+    assert bool(ring.invariants_ok(r))
+
+
+@given(st.lists(st.tuples(st.integers(1, 4), st.integers(0, 3)),
+                min_size=1, max_size=30))
+@settings(max_examples=40, deadline=None)
+def test_interleaved_alloc_consume_never_violates_invariants(script):
+    """Random interleaving of {allocate, consume, flow-control} keeps the
+    §IV-C invariant set: stale_head <= head <= tail <= head+capacity."""
+    cap = 8
+    r = ring.make_ring(cap)
+    outstanding = []          # allocated, unconsumed logical indexes
+    next_alloc = 0
+    for n_alloc, pick in script:
+        n = jnp.asarray(n_alloc, jnp.int32)
+        if bool(ring.can_allocate(r, n)):
+            r, start = ring.allocate(r, n)
+            outstanding.extend(range(next_alloc, next_alloc + n_alloc))
+            next_alloc += n_alloc
+        if outstanding:
+            idx = outstanding.pop(pick % len(outstanding))
+            r = ring.consume(r, jnp.asarray(idx, jnp.int32))
+        if pick % 2:
+            r = ring.flow_control_update(r)
+        assert bool(ring.invariants_ok(r))
+        assert int(r.tail) - int(r.head) <= cap
+
+
+def test_ring_traceable_under_jit():
+    """The index algebra must work inside jit (used by streamed pipelines)."""
+
+    @jax.jit
+    def step(r):
+        r, _ = ring.allocate(r, jnp.asarray(2, jnp.int32))
+        r = ring.consume(r, jnp.asarray(1, jnp.int32))
+        r = ring.consume(r, jnp.asarray(0, jnp.int32))
+        return ring.flow_control_update(r)
+
+    r = step(ring.make_ring(4))
+    assert int(r.head) == 2 and int(r.stale_head) == 2 and int(r.tail) == 2
+    assert bool(ring.invariants_ok(r))
