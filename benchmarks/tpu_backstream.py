@@ -5,6 +5,22 @@ AXLE ring streaming, RP serialized chunks) on the host platform and
 verifies numerical equivalence.  On CPU the wall times only show
 schedule overheads — the dry-run HLO (§Roofline) carries the real signal
 — but the equivalence + bytes-on-wire derivation is platform-true.
+
+DESIGN — fused vs chunked bytes/launch accounting
+-------------------------------------------------
+The chunked decode schedule launches one producer kernel per KV chunk
+(n_chunks pallas_calls on TPU) and each launch writes its (acc, m, l)
+partial to HBM — n_chunks * B*H*(hd+2) f32 of statistic traffic — before
+a separate XLA merge reads them all back and normalizes.  The fused
+one-shot kernel (`decode_attention_fused`) makes the chunk axis the
+innermost *grid* dimension of a single launch: the statistics never
+leave VMEM, the normalized output is written once, and the only HBM
+traffic is the unavoidable KV-cache read + B*H*hd output write.  Per
+decode step that removes (n_chunks - 1) launch overheads and
+(2*n_chunks - 1) * B*H*(hd+2) * 4 bytes of round-trip traffic (n_chunks
+partial writes + n_chunks reads, minus the single fused write).  The
+`fused_launches=...` / `stat_roundtrip_bytes=...` fields in the rows
+below derive exactly that.
 """
 from __future__ import annotations
 
@@ -39,9 +55,14 @@ def run() -> List[Row]:
     mesh = jax.make_mesh((1, n_dev), ("data", "model")) \
         if n_dev > 1 else None
     outs = {}
-    for proto in (OffloadProtocol.BS, OffloadProtocol.RP,
-                  OffloadProtocol.AXLE):
-        cfg = OffloadConfig(protocol=proto, chunks_per_shard=4)
+    n_chunks = 4
+    for name, proto, fused in (
+            ("BS", OffloadProtocol.BS, True),
+            ("BS_chunked", OffloadProtocol.BS, False),
+            ("RP", OffloadProtocol.RP, False),
+            ("AXLE", OffloadProtocol.AXLE, True)):
+        cfg = OffloadConfig(protocol=proto, chunks_per_shard=n_chunks,
+                            fused=fused)
         rules = sh.ShardingRules(mesh, seq_shard_attn=True) if mesh else None
 
         def f(q, k, v):
@@ -58,19 +79,40 @@ def run() -> List[Row]:
                 out = jf(q, k, v)
             out.block_until_ready()
             dt = (time.perf_counter() - t0) / n
-        outs[proto.name] = np.asarray(out)
+        outs[name] = np.asarray(out)
         # bytes on the wire per merge under each schedule (n shards):
         # BS all-gather: (n-1)·B·H·(hd+2)·4 per shard; AXLE ring: same total
-        # but chunked into n-1 hops that overlap compute.
+        # but chunked into n-1 hops that overlap compute.  Launch/traffic
+        # accounting per the DESIGN note above: the fused path is ONE
+        # kernel launch with zero (acc, m, l) HBM round trips; the chunked
+        # path is n_chunks launches with (2·n_chunks − 1)·B·H·(hd+2)·4
+        # bytes of statistic round-trip traffic.
         n_sh = mesh.shape["model"] if mesh else 1
         wire = (n_sh - 1) * B * H * (HD + 2) * 4
-        rows.append((f"tpu_backstream.{proto.name}", dt * 1e6,
-                     f"wire_bytes_per_shard={wire}"))
+        # mirror decode_attention_combined's routing so the rows report
+        # the schedule that actually ran, not the one requested: the
+        # fused one-shot launch applies only to the unsharded non-RP
+        # case; the sharded AXLE ring runs one fused-partial launch per
+        # shard with the statistics riding the ring (wire bytes above),
+        # never round-tripping HBM.
+        if proto == OffloadProtocol.AXLE and n_sh > 1:
+            launches, stat_rt = n_sh, 0
+        elif fused and n_sh <= 1 and proto != OffloadProtocol.RP:
+            launches, stat_rt = 1, 0
+        else:
+            launches = n_chunks * max(1, n_sh)
+            stat_rt = (2 * launches - 1) * B * H * (HD + 2) * 4
+        rows.append((f"tpu_backstream.{name}", dt * 1e6,
+                     f"wire_bytes_per_shard={wire};"
+                     f"fused_launches={launches};"
+                     f"stat_roundtrip_bytes={stat_rt}"))
     err_rp = float(np.max(np.abs(outs["RP"] - outs["BS"])))
     err_ax = float(np.max(np.abs(outs["AXLE"] - outs["BS"])))
+    err_ch = float(np.max(np.abs(outs["BS_chunked"] - outs["BS"])))
     rows.append(("tpu_backstream.equivalence", 0.0,
-                 f"max_err_rp={err_rp:.2e};max_err_axle={err_ax:.2e}"))
-    assert err_rp < 1e-4 and err_ax < 1e-4
+                 f"max_err_rp={err_rp:.2e};max_err_axle={err_ax:.2e};"
+                 f"max_err_chunked={err_ch:.2e}"))
+    assert err_rp < 1e-4 and err_ax < 1e-4 and err_ch < 1e-4
     return rows
 
 

@@ -26,7 +26,13 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+try:                                      # optional dep: some containers
+    import zstandard                      # ship without zstd bindings
+except ImportError:                       # — fall back to stdlib zlib
+    zstandard = None
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 _DTYPE_KEY = "__dtype__"
@@ -58,7 +64,8 @@ def save(ckpt_dir: str, step: int, tree: Any, *, retries: int = 3,
         "step": step,
         "leaves": [_pack_leaf(x) for x in leaves],
     })
-    data = zstandard.ZstdCompressor(level=3).compress(payload)
+    data = (zstandard.ZstdCompressor(level=3).compress(payload)
+            if zstandard is not None else zlib.compress(payload, 6))
     path = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
     tmp = path + f".tmp.{os.getpid()}"
     last_err: Optional[Exception] = None
@@ -101,7 +108,14 @@ def available_steps(ckpt_dir: str):
 
 def _load_file(path: str) -> Tuple[int, list]:
     with open(path, "rb") as f:
-        payload = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = f.read()
+    if raw[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ImportError(
+                f"{path} is zstd-compressed but zstandard is unavailable")
+        payload = zstandard.ZstdDecompressor().decompress(raw)
+    else:
+        payload = zlib.decompress(raw)
     rec = msgpack.unpackb(payload)
     return rec["step"], [_unpack_leaf(x) for x in rec["leaves"]]
 

@@ -52,6 +52,10 @@ class OffloadConfig:
     chunks_per_shard: int = 1
     # ring depth for stream_offload pipelining (flow-control credits)
     ring_depth: int = 2
+    # fused one-shot decode kernel (produce + merge + normalize in ONE
+    # launch).  False falls back to the chunked lax.map + XLA-merge
+    # schedule — retained only as the ref-checked fallback.
+    fused: bool = True
 
 
 _state = threading.local()
@@ -143,11 +147,19 @@ def cache_update_sharded(cache: jax.Array, new: jax.Array,
     Under shard_map the slot lands in exactly one shard; every shard does
     a dense one-token dynamic-update-slice at the clamped local offset —
     non-owners rewrite their current value (2×token bytes of traffic
-    instead of 2×S_local·hd)."""
+    instead of 2×S_local·hd).
+
+    `slot` may also be a (B,) vector (continuous batching: every row sits
+    at its own sequence offset); the per-row write lowers to a scatter,
+    which GSPMD handles but without the D4 fast path."""
     rules = active_rules()
     mesh = rules.mesh if rules is not None else None
     axis = rules.model_axis if rules is not None else None
     b, kh, s, hd = cache.shape
+    slot = jnp.asarray(slot, jnp.int32)
+    if slot.ndim == 1:
+        return cache.at[jnp.arange(b), :, slot, :].set(
+            new.astype(cache.dtype)[:, :, 0, :])
     if (mesh is None or axis is None or not rules.seq_shard_attn
             or s % mesh.shape[axis] or mesh.shape[axis] == 1):
         return lax.dynamic_update_slice(cache, new, (0, 0, slot, 0))
@@ -181,11 +193,19 @@ def cache_update_stacked(cache: jax.Array, new: jax.Array,
     """Layer-stacked variant: cache (L,B,KH,S,hd), new (L,B,KH,1,hd).
     One ring-slot write for ALL layers at once, issued outside the layer
     scan (§Perf iteration D5) — total update traffic is L·B·KH·hd·2 bytes
-    instead of a full-slice re-stack per layer."""
+    instead of a full-slice re-stack per layer.
+
+    `slot` may be a (B,) vector of per-row ring slots (continuous
+    batching); the per-row write lowers to a scatter."""
     rules = active_rules()
     mesh = rules.mesh if rules is not None else None
     axis = rules.model_axis if rules is not None else None
     nl, b, kh, s, hd = cache.shape
+    slot = jnp.asarray(slot, jnp.int32)
+    if slot.ndim == 1:
+        val = new.astype(cache.dtype)[:, :, :, 0, :]          # (L,B,KH,hd)
+        return cache.at[:, jnp.arange(b), :, slot, :].set(
+            val.transpose(1, 0, 2, 3))
     if (mesh is None or axis is None or not rules.seq_shard_attn
             or s % mesh.shape[axis] or mesh.shape[axis] == 1):
         return lax.dynamic_update_slice(cache, new.astype(cache.dtype),
@@ -223,7 +243,15 @@ def cache_update_stacked(cache: jax.Array, new: jax.Array,
 def _partials_over_chunks(q, k, v, kv_valid, n_chunks):
     """Split the KV sequence into n_chunks and compute partial attention for
     each: returns acc (n,B,H,hd), m (n,B,H), l (n,B,H).
-    k/v: (B, KH, S, hd) — the flash-decoding cache layout."""
+    k/v: (B, KH, S, hd) — the flash-decoding cache layout.
+
+    This is the chunked fallback schedule: one producer task per chunk
+    (a kernel launch each on TPU) whose (acc, m, l) partials round-trip
+    through HBM into a separate XLA merge.  The fused kernel
+    (`kernels.flash_attention.decode_attention_fused`) collapses all of
+    it into a single launch; this path is retained ref-checked for
+    `OffloadConfig(fused=False)` and the RP schedule."""
+    from repro.kernels import ops
     b, kh, s, hd = k.shape
     assert s % n_chunks == 0, (s, n_chunks)
     c = s // n_chunks
@@ -233,9 +261,18 @@ def _partials_over_chunks(q, k, v, kv_valid, n_chunks):
 
     def one(args):
         kk, vv, val = args
-        return L.decode_attention_partial(q, kk, vv, val)
+        return ops.decode_attention_partial(q, kk, vv, val)
 
     return lax.map(one, (kc, vc, valc))
+
+
+def _decode_valid_mask(pos_b: jax.Array, s: int, window: int) -> jax.Array:
+    """(B,S) bool mask of attended cache slots for per-row positions."""
+    slots = jnp.arange(s)
+    valid = slots[None, :] <= pos_b[:, None]
+    if window:
+        valid &= slots[None, :] > (pos_b - window)[:, None]
+    return valid
 
 
 def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
@@ -245,7 +282,15 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
                               extra: Optional[Any] = None) -> jax.Array:
     """Single-step attention of q (B,1,H,hd) against a (possibly sequence-
     sharded) KV cache (B,KH,S,hd), combined under the active offload
-    protocol.  Returns (B, 1, H, hd).
+    protocol.  `pos` is the last valid cache slot — a scalar, or a (B,)
+    vector of per-row positions (continuous batching: slots sit at
+    different sequence offsets).  Returns (B, 1, H, hd).
+
+    Fast path (fused=True, BS/single-shard): ONE fused kernel launch that
+    accumulates the partial-softmax statistics in VMEM across the whole
+    KV sequence and writes the normalized output once — the producer and
+    the merge collapse into a single device-side task, the kernel-level
+    analogue of removing the bulk-synchronous result load.
 
     Under GSPMD, chunking along the sequence axis aligns chunks with the
     sequence shards of the cache: each 'CCM-side' shard computes the partial
@@ -254,14 +299,11 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
     (Table I, LLM row).  BS merges them with one bulk collective; AXLE
     streams them around the ring with ppermute hops that overlap compute.
     """
+    from repro.kernels import ops
     cfg = current_offload()
     rules = active_rules()
     b, kh, s, hd = k_cache.shape
-    slots = jnp.arange(s)
-    kv_valid = jnp.broadcast_to((slots <= pos)[None], (b, s))
-    if window:
-        kv_valid = kv_valid & jnp.broadcast_to(
-            (slots > pos - window)[None], (b, s))
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
 
     mesh = rules.mesh if rules is not None else None
     axis = rules.model_axis if rules is not None else None
@@ -280,12 +322,30 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
             b_size *= mesh.shape[a]
         if b_size == 0 or b % b_size:
             b_axes = None
+        kv_valid = _decode_valid_mask(pos_b, s, window)
         return _axle_ring_decode(q, k_cache, v_cache, kv_valid, mesh, axis,
                                  b_axes, extra)
 
-    # BS / RP / single-shard path: chunked partials + one merge.  With a
-    # sequence-sharded cache GSPMD lowers the merge to a bulk all-gather of
-    # the (acc, m, l) statistics: the bulk-synchronous flow.
+    if (cfg.fused and cfg.protocol != OffloadProtocol.RP
+            and (mesh is None or n_shards <= 1)):
+        # BS / single-shard fast path: one fused launch, chunk size chosen
+        # so the fused kernel's internal grid matches the configured
+        # chunking (the VMEM-resident accumulation makes the count
+        # irrelevant for traffic — it only sizes the k/v tiles, so cap it
+        # at 128 rows to keep the f32 tiles inside the VMEM budget at any
+        # cache length).  Gated to the unsharded case: GSPMD cannot
+        # partition a pallas_call over a sequence-sharded cache; sharded
+        # decode goes through the AXLE shard_map ring whose local compute
+        # is device-local.
+        blk_c = max(1, min(128, s // max(1, n_chunks)))
+        return ops.decode_attention_fused(q, k_cache, v_cache, pos_b, extra,
+                                          window=window, blk_c=blk_c)
+
+    # Chunked fallback (fused=False, and the RP schedule): per-chunk
+    # partials + one merge.  With a sequence-sharded cache GSPMD lowers the
+    # merge to a bulk all-gather of the (acc, m, l) statistics: the
+    # bulk-synchronous flow.
+    kv_valid = _decode_valid_mask(pos_b, s, window)
     accs, ms, ls = _partials_over_chunks(q, k_cache, v_cache, kv_valid,
                                          n_chunks)
     if extra is not None:
@@ -312,7 +372,11 @@ def _axle_ring_decode(q, k_cache, v_cache, kv_valid, mesh, axis, batch_axes,
     extra_args = tuple(extra) if has_extra else ()
 
     def local(q_l, k_l, v_l, valid_l, *extra_l):
-        acc, m, l = L.decode_attention_partial(q_l, k_l, v_l, valid_l)
+        # shard-local producer task: ONE fused-partial kernel launch over
+        # the whole local KV chunk (VMEM-resident accumulation) — pallas
+        # composes with shard_map because everything here is per-device.
+        from repro.kernels import ops
+        acc, m, l = ops.decode_attention_partial(q_l, k_l, v_l, valid_l)
         # ring-reduce the merge: n-1 hops; hop k delivers the partial of
         # shard (i - k) to shard i, so after n-1 hops every shard holds the
         # full merge.  Each hop's transfer overlaps the local merge math.

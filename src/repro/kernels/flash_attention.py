@@ -13,6 +13,16 @@ offload:
   * `decode_partial_kernel` — single-token attention over one KV chunk,
     emitting the raw (acc, m, l) partials.  This is the producer-side
     task of `repro.core.backstream.decode_attention_combined`.
+  * `decode_fused_kernel` — ONE-SHOT flash decode: grid (B, KH, n_chunks)
+    with the chunk axis innermost and accumulating, so the partial-softmax
+    (acc, m, l) statistics live in VMEM scratch across the whole KV
+    sequence and the normalized output is written exactly once.  No
+    per-chunk kernel launches, no (acc, m, l) HBM round trips, no
+    separate XLA merge.  Supports GQA, sliding windows, *per-batch-row*
+    positions (a (B,) pos vector, required for continuous batching where
+    slots sit at different sequence offsets) and an optional extra
+    partial (the current token's own (acc, m, l), merged in the epilogue
+    so the cache can stay read-only during the layer scan).
 
 VMEM budget per grid cell (bf16 inputs, f32 scratch):
   q (blk_q, hd) + k,v (blk_k, hd) + acc (blk_q, hd) + p (blk_q, blk_k).
@@ -30,6 +40,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pltpu_compat import CompilerParams as _CompilerParams
 
 NEG_INF = -1e30
 
@@ -126,7 +138,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((blk_q,), jnp.float32),
             pltpu.VMEM((blk_q,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
@@ -222,8 +234,139 @@ def decode_attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((group,), jnp.float32),
             pltpu.VMEM((group,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qt, kt, vt, valid)
     return (acc.reshape(b, h, hd), m.reshape(b, h), l.reshape(b, h))
+
+
+# --------------------------------------------------------------------------
+# Decode: fused one-shot flash decode (produce + merge + normalize)
+# --------------------------------------------------------------------------
+
+def _decode_fused_kernel(pos_ref, q_ref, k_ref, v_ref, *rest,
+                         scale: float, blk_c: int, n_c: int, window: int,
+                         group: int, has_extra: bool):
+    if has_extra:
+        acc_e_ref, m_e_ref, l_e_ref, o_ref, acc_s, m_s, l_s = rest
+    else:
+        o_ref, acc_s, m_s, l_s = rest
+    j = pl.program_id(2)          # chunk block (innermost, accumulating)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    pos = pos_ref[0, 0]                                   # this row's offset
+    q = q_ref[0, 0].astype(jnp.float32) * scale           # (group, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                   # (blk_c, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    kpos = j * blk_c + lax.broadcasted_iota(jnp.int32, (group, blk_c), 1)
+    valid = kpos <= pos
+    if window > 0:
+        valid &= kpos > pos - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=-1)
+    acc_s[...] = (acc_s[...] * alpha[:, None]
+                  + jax.lax.dot(p, v, preferred_element_type=jnp.float32))
+    m_s[...] = m_new
+
+    @pl.when(j == n_c - 1)
+    def _finish():
+        acc = acc_s[...]
+        l = l_s[...]
+        if has_extra:
+            # merge the current token's own (acc, m, l) partial in VMEM —
+            # the epilogue of the back-streaming merge, fused in-kernel.
+            m = m_s[...]
+            m_e = m_e_ref[0, 0]
+            mm = jnp.maximum(m, m_e)
+            a1 = jnp.exp(m - mm)
+            a2 = jnp.exp(m_e - mm)
+            acc = acc * a1[:, None] + acc_e_ref[0, 0] * a2[:, None]
+            l = l * a1 + l_e_ref[0, 0] * a2
+        o_ref[0, 0] = (acc
+                       / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
+                           pos: jax.Array,
+                           extra: Optional[Tuple[jax.Array, jax.Array,
+                                                 jax.Array]] = None,
+                           *, window: int = 0, blk_c: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """One-shot flash decode: q (B,1,H,hd) against the whole KV cache
+    k/v (B,KH,S,hd), with per-batch-row positions pos (B,) (or a scalar,
+    broadcast), masked to slots `pos-window < slot <= pos` (window=0 =>
+    no lower bound).  `extra` is an optional (acc (B,H,hd) f32, m (B,H),
+    l (B,H)) partial merged in the epilogue.  Returns (B,1,H,hd) q.dtype.
+
+    ONE pallas_call for the whole sequence: the chunk axis is the
+    innermost grid dimension and (acc, m, l) accumulate in VMEM scratch,
+    so there are no per-chunk launches and no partial-statistic HBM
+    round trips (vs the lax.map + XLA-merge fallback)."""
+    b, _, h, hd = q.shape
+    kh, s = k.shape[1], k.shape[2]
+    assert h % kh == 0
+    group = h // kh
+    blk_c = max(1, min(blk_c, s))
+    while s % blk_c:              # largest divisor of s not above blk_c
+        blk_c -= 1
+    n_c = s // blk_c
+    scale = hd ** -0.5
+
+    qt = q[:, 0].reshape(b, kh, group, hd)                # (B,KH,group,hd)
+    pos2 = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1),
+                            (b, 1))
+
+    kernel = functools.partial(
+        _decode_fused_kernel, scale=scale, blk_c=blk_c, n_c=n_c,
+        window=window, group=group, has_extra=extra is not None)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda b_, h_, j: (b_, 0),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, 1, group, hd), lambda b_, h_, j: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, blk_c, hd), lambda b_, h_, j: (b_, h_, j, 0)),
+        pl.BlockSpec((1, 1, blk_c, hd), lambda b_, h_, j: (b_, h_, j, 0)),
+    ]
+    args = [pos2, qt, k, v]
+    if extra is not None:
+        acc_e, m_e, l_e = extra
+        args += [acc_e.astype(jnp.float32).reshape(b, kh, group, hd),
+                 m_e.astype(jnp.float32).reshape(b, kh, group),
+                 l_e.astype(jnp.float32).reshape(b, kh, group)]
+        in_specs += [
+            pl.BlockSpec((1, 1, group, hd),
+                         lambda b_, h_, j: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, group), lambda b_, h_, j: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, group), lambda b_, h_, j: (b_, h_, 0)),
+        ]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kh, n_c),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda b_, h_, j: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, group, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, hd), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)
+    return out.reshape(b, 1, h, hd)

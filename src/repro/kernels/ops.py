@@ -43,7 +43,25 @@ def decode_attention_partial(q, k, v, valid, *, blk_c: int = 128,
     if _on_tpu() or interpret:
         return _fa.decode_attention_partial(q, k, v, valid, blk_c=blk_c,
                                             interpret=interpret)
-    return _ref.decode_partial_reference(q, k, v, valid)
+    # CPU fallback: the GQA-native einsum formulation (no repeat_kv
+    # materialization) — same statistics as the oracle, far less traffic.
+    from repro.models import layers as _L
+    return _L.decode_attention_partial(q, k, v, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "blk_c", "interpret"))
+def decode_attention_fused(q, k, v, pos, extra=None, *, window: int = 0,
+                           blk_c: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """Fused one-shot flash decode (produce + merge + normalize in ONE
+    kernel launch).  q: (B,1,H,hd); k,v: (B,KH,S,hd); pos: (B,) or scalar
+    per-row positions; extra: optional (acc, m, l) current-token partial.
+    Returns (B,1,H,hd)."""
+    if _on_tpu() or interpret:
+        return _fa.decode_attention_fused(q, k, v, pos, extra,
+                                          window=window, blk_c=blk_c,
+                                          interpret=interpret)
+    return _ref.decode_fused_reference(q, k, v, pos, extra, window=window)
 
 
 @functools.partial(jax.jit, static_argnames=("blk_q", "blk_n", "interpret"))

@@ -1,0 +1,12 @@
+"""jax-version compatibility for the Pallas TPU kernels.
+
+`pltpu.CompilerParams` was named `TPUCompilerParams` before jax 0.5;
+every kernel module imports the resolved class from here so a future
+rename is fixed in exactly one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

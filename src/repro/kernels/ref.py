@@ -73,6 +73,38 @@ def decode_partial_reference(q: jax.Array, k: jax.Array, v: jax.Array,
     return acc, m, l
 
 
+def decode_fused_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                           pos: jax.Array,
+                           extra: Optional[Tuple[jax.Array, jax.Array,
+                                                 jax.Array]] = None,
+                           *, window: int = 0) -> jax.Array:
+    """Oracle for the fused one-shot flash-decode kernel.
+
+    q: (B,1,H,hd); k,v: (B,KH,S,hd); pos: (B,) int32 (or scalar,
+    broadcast) — per-row last valid cache slot; slots `pos-window < slot
+    <= pos` are attended (window=0 => no lower bound).  `extra` is an
+    optional (acc (B,H,hd), m (B,H), l (B,H)) partial merged before
+    normalization.  Returns (B,1,H,hd) in q.dtype."""
+    b, _, h, hd = q.shape
+    s = k.shape[2]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    slots = jnp.arange(s)
+    valid = slots[None, :] <= pos_b[:, None]
+    if window > 0:
+        valid &= slots[None, :] > (pos_b - window)[:, None]
+    acc, m, l = decode_partial_reference(q, k, v, valid)
+    if extra is not None:
+        acc_e, m_e, l_e = extra
+        mm = jnp.maximum(m, m_e)
+        mm_safe = jnp.where(jnp.isfinite(mm), mm, 0.0)
+        a1 = jnp.where(jnp.isfinite(m), jnp.exp(m - mm_safe), 0.0)
+        a2 = jnp.where(jnp.isfinite(m_e), jnp.exp(m_e - mm_safe), 0.0)
+        acc = acc * a1[..., None] + acc_e.astype(jnp.float32) * a2[..., None]
+        l = l * a1 + l_e * a2
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out[:, None].astype(q.dtype)
+
+
 # --------------------------------------------------------------------------
 # KNN distances (VectorDB offload target)
 # --------------------------------------------------------------------------

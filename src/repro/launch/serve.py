@@ -1,16 +1,39 @@
-"""Batched serving driver with offload-protocol selection.
+"""Batched serving driver with offload-protocol selection and an
+asynchronous token-streaming hot loop.
 
 The paper's serving pattern (Table I, LLM row): attention over the
 memory-resident KV cache is the producer-side task; the downstream MLP /
 sampling is the consumer.  `--protocol {bs,axle,rp}` selects the
 partial-attention merge schedule (repro.core.backstream):
 
-  bs   — bulk-synchronous all-gather of partial statistics (M²NDP flow)
+  bs   — fused one-shot decode kernel (single-shard) / bulk-synchronous
+         all-gather of partial statistics under a mesh (M²NDP flow)
   axle — producer-initiated ring streaming with compute/transfer overlap
   rp   — serialized per-chunk round trips (device-centric baseline)
 
 Requests are continuously batched: a request queue fills free decode
-slots each step; finished sequences retire and their slots are reused.
+slots, finished sequences retire and their slots are reused.  Every slot
+keeps its OWN position clock (a (B,) vector threaded through RoPE, cache
+validity and ring-slot writes) — the correctness requirement of
+continuous batching that a scalar step counter cannot express.
+
+Two host loops over the same jitted steps:
+
+  per-token (`step`)      — one dispatch + one host sync per token; the
+                            bulk-synchronous baseline.
+  streamed  (`run_stream`)— producer-initiated: a jitted `seg_len`-token
+                            lax.scan segment decodes on-device while the
+                            host consumes the PREVIOUS segment's tokens
+                            (double buffering via overlapped device_get),
+                            so the host syncs once per segment instead of
+                            once per token.  Next-segment inputs chain
+                            device-side (last tokens / positions never
+                            round-trip through the host).
+
+Prompt admission runs a real prefill — the full prompt through the
+flash_attention kernel, per-layer K/V written into the slot's cache rows
+— instead of the old last-token seeding that dropped every other prompt
+token's KV.
 """
 from __future__ import annotations
 
@@ -29,6 +52,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.core.backstream import (OffloadConfig, OffloadProtocol,
                                    use_offload)
 from repro.launch import steps as steps_lib
+from repro.models import transformer
 from repro.models.registry import get_model
 
 PROTOCOLS = {"bs": OffloadProtocol.BS, "axle": OffloadProtocol.AXLE,
@@ -43,76 +67,210 @@ class Request:
     generated: Optional[List[int]] = None
 
 
+def _prefill_bucket(n: int, cap: int) -> int:
+    """Pad prompt lengths to powers of two (>= 8) so the jitted prefill
+    retraces once per bucket, not once per length; capped at `cap`
+    (= max_seq) so a legal prompt never pads past the cache."""
+    p = 8
+    while p < n:
+        p *= 2
+    return min(p, cap)
+
+
 class BatchedServer:
     """Slot-based continuous batching over a fixed decode batch."""
 
     def __init__(self, arch_id: str, *, smoke: bool = True,
                  batch_slots: int = 4, max_seq: int = 256,
                  protocol: str = "axle", chunks_per_shard: int = 1,
-                 mesh=None):
+                 mesh=None, seg_len: int = 8, stream: bool = False,
+                 prefill: bool = True):
         self.cfg = (get_smoke_config(arch_id) if smoke
                     else get_config(arch_id))
         self.model = get_model(self.cfg)
         self.batch = batch_slots
         self.max_seq = max_seq
+        self.seg_len = seg_len
+        self.stream = stream
         self.offload = OffloadConfig(protocol=PROTOCOLS[protocol],
                                      chunks_per_shard=chunks_per_shard)
         self.rules = sh.ShardingRules(mesh, seq_shard_attn=True) \
             if mesh is not None else None
         self.params = self.model.init_params(self.cfg, jax.random.key(0))
-        if self.cfg.enc_dec:
-            self.cache = self.model.init_cache(self.cfg, batch_slots,
-                                               max_seq)
-        else:
-            self.cache = self.model.init_cache(self.cfg, batch_slots,
-                                               max_seq)
+        self.cache = self.model.init_cache(self.cfg, batch_slots, max_seq)
         # cache donation: in-place ring-slot updates (§Perf iteration D3)
         self.step_fn = jax.jit(steps_lib.make_serve_step(self.cfg),
                                donate_argnums=(1,))
+        self.segment_fn = jax.jit(
+            steps_lib.make_decode_segment(self.cfg, seg_len),
+            donate_argnums=(1,))
+        self.prefill_fn = None
+        if prefill and transformer.supports_prefill_into_cache(self.cfg):
+            self.prefill_fn = jax.jit(
+                steps_lib.make_prefill_into_cache(self.cfg),
+                donate_argnums=(1,))
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.tokens = np.zeros((batch_slots, 1), np.int32)
+        self.positions = np.zeros((batch_slots,), np.int32)
         self.remaining = np.zeros((batch_slots,), np.int32)
         self.completed: List[Request] = []
-        self.steps = 0
+        self.steps = 0                 # decode token-steps issued
+        self.segments_dispatched = 0
+        self.host_syncs = 0            # every host<->device sync (incl. prefill)
+        self.decode_syncs = 0          # syncs attributable to the decode loop
+        self.tokens_emitted = 0
+
+    # -- admission ---------------------------------------------------------
 
     def submit(self, req: Request) -> None:
         req.generated = []
         self.queue.append(req)
 
-    def _fill_slots(self) -> None:
+    def _ctx(self):
+        return self.rules.mesh if self.rules is not None else _null()
+
+    def _prefill(self, slot: int, req: Request) -> int:
+        """Real prefill: the whole prompt through the flash-attention
+        kernel, per-layer K/V written into this slot's cache rows.
+        Returns the first generated token."""
+        plen = len(req.prompt)
+        assert plen <= self.max_seq, (plen, self.max_seq)
+        padded = np.zeros((_prefill_bucket(plen, self.max_seq),), np.int32)
+        padded[:plen] = req.prompt
+        with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
+            logits, self.cache = self.prefill_fn(
+                self.params, self.cache, jnp.asarray(padded), slot, plen)
+        self.host_syncs += 1
+        return int(jnp.argmax(logits))
+
+    def _fill_slots(self) -> List[int]:
+        """Admit queued requests into free slots; returns the slots that
+        were (re)seeded this call."""
+        seeded: List[int] = []
         for s in range(self.batch):
             if self.active[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[s] = req
-                # teacher-forced "prefill" of the prompt through decode
-                # steps would pollute other slots' caches; the smoke-scale
-                # server seeds with the last prompt token instead.
-                self.tokens[s, 0] = int(req.prompt[-1])
-                self.remaining[s] = req.max_new
+                if self.prefill_fn is not None:
+                    first = self._prefill(s, req)
+                    req.generated.append(first)
+                    self.tokens_emitted += 1
+                    self.tokens[s, 0] = first
+                    # the first generated token sits at position len(prompt)
+                    self.positions[s] = len(req.prompt)
+                    self.remaining[s] = req.max_new - 1
+                    if self.remaining[s] <= 0:
+                        self.completed.append(req)
+                        self.active[s] = None
+                        continue
+                else:
+                    # archs without a prefill path (SSM/hybrid state handoff
+                    # is an open item): seed with the last prompt token at
+                    # position 0 — the smoke-scale approximation.
+                    self.tokens[s, 0] = int(req.prompt[-1])
+                    self.positions[s] = 0
+                    self.remaining[s] = req.max_new
+                seeded.append(s)
+        return seeded
+
+    # -- per-token loop (bulk-synchronous baseline) ------------------------
 
     def step(self) -> None:
         self._fill_slots()
         if all(r is None for r in self.active):
             return
-        ctx = self.rules.mesh if self.rules is not None else _null()
-        with ctx, sh.use_rules(self.rules), use_offload(self.offload):
-            nxt, _, self.cache = self.step_fn(self.params, self.cache,
-                                              jnp.asarray(self.tokens))
+        with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
+            nxt, _, self.cache = self.step_fn(
+                self.params, self.cache, jnp.asarray(self.tokens),
+                jnp.asarray(self.positions))
         nxt = np.asarray(nxt)
+        self.host_syncs += 1
+        self.decode_syncs += 1
         self.steps += 1
+        self.positions += 1
         for s in range(self.batch):
             req = self.active[s]
             if req is None:
                 continue
             req.generated.append(int(nxt[s, 0]))
+            self.tokens_emitted += 1
             self.tokens[s, 0] = nxt[s, 0]
             self.remaining[s] -= 1
             if self.remaining[s] <= 0:
                 self.completed.append(req)
                 self.active[s] = None
 
+    # -- streamed loop (producer-initiated token stream) -------------------
+
+    def run_stream(self, max_steps: int = 10_000) -> None:
+        """Decode in jitted `seg_len`-token segments with double-buffered
+        host consumption: segment i+1 is dispatched BEFORE segment i's
+        tokens are copied out, so the device_get overlaps device compute
+        and the host syncs once per segment (<= 1 sync / seg_len tokens).
+
+        Slot accounting happens at dispatch time (greedy decode is
+        deterministic, so how many of a segment's tokens a request will
+        take is known when it is dispatched); tokens are delivered to
+        `Request.generated` one segment later."""
+        tok_dev = jnp.asarray(self.tokens)
+        pos_dev = jnp.asarray(self.positions, jnp.int32)
+        pending = None                       # (segment tokens, rows taken)
+        while True:
+            for s in self._fill_slots():
+                tok_dev = tok_dev.at[s, 0].set(int(self.tokens[s, 0]))
+                pos_dev = pos_dev.at[s].set(int(self.positions[s]))
+            nxt_pending = None
+            if self.steps < max_steps \
+                    and any(r is not None for r in self.active):
+                rows: Dict[int, Any] = {}
+                for s in range(self.batch):
+                    req = self.active[s]
+                    if req is None:
+                        continue
+                    take = int(min(self.seg_len, self.remaining[s]))
+                    rows[s] = (req, take)
+                    self.remaining[s] -= take
+                    if self.remaining[s] <= 0:
+                        # retire at dispatch: the refill's prefill is
+                        # sequenced after this segment on device, so the
+                        # slot can be reused next iteration while tokens
+                        # are still in flight to the host.
+                        self.completed.append(req)
+                        self.active[s] = None
+                with self._ctx(), sh.use_rules(self.rules), \
+                        use_offload(self.offload):
+                    seg, tok_dev, pos_dev, self.cache = self.segment_fn(
+                        self.params, self.cache, tok_dev, pos_dev)
+                self.steps += self.seg_len
+                self.segments_dispatched += 1
+                self.positions += self.seg_len
+                nxt_pending = (seg, rows)
+            if pending is not None:
+                # ONE host sync per segment; overlaps the segment just
+                # dispatched above.
+                self._consume_segment(*pending)
+            pending = nxt_pending
+            if pending is not None:
+                continue
+            if self.steps >= max_steps:
+                return          # step cap: remaining requests stay active
+            if not self.queue and all(r is None for r in self.active):
+                return
+
+    def _consume_segment(self, seg, rows) -> None:
+        arr = np.asarray(jax.device_get(seg))
+        self.host_syncs += 1
+        self.decode_syncs += 1
+        for s, (req, take) in rows.items():
+            for t in arr[s, :take]:
+                req.generated.append(int(t))
+            self.tokens_emitted += take
+
     def run_until_drained(self, max_steps: int = 10_000) -> None:
+        if self.stream:
+            self.run_stream(max_steps)
+            return
         while (self.queue or any(r is not None for r in self.active)) \
                 and self.steps < max_steps:
             self.step()
@@ -133,11 +291,15 @@ def main() -> int:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--stream", action="store_true",
+                    help="producer-initiated segment streaming loop")
+    ap.add_argument("--seg-len", type=int, default=8)
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
     server = BatchedServer(args.arch, smoke=True, batch_slots=args.slots,
-                           protocol=args.protocol)
+                           protocol=args.protocol, stream=args.stream,
+                           seg_len=args.seg_len)
     t0 = time.time()
     for i in range(args.requests):
         plen = int(rng.integers(4, 12))
@@ -146,8 +308,11 @@ def main() -> int:
     server.run_until_drained()
     dt = time.time() - t0
     toks = sum(len(r.generated) for r in server.completed)
-    print(f"[serve] protocol={args.protocol} requests={len(server.completed)}"
-          f" tokens={toks} steps={server.steps} "
+    mode = "stream" if args.stream else "per-token"
+    spt = server.decode_syncs / max(1, toks)
+    print(f"[serve] protocol={args.protocol} mode={mode} "
+          f"requests={len(server.completed)} tokens={toks} "
+          f"steps={server.steps} syncs/token={spt:.3f} "
           f"({toks / dt:.1f} tok/s on CPU)")
     return 0
 

@@ -47,13 +47,58 @@ def make_prefill_step(cfg: ArchConfig):
 
 
 def make_serve_step(cfg: ArchConfig, *, greedy: bool = True):
-    """(params, cache, tokens) -> (next_tokens, logits, cache) — one decode
-    step with KV/SSM caches; this is what `decode_*`/`long_*` shapes lower."""
+    """(params, cache, tokens[, positions]) -> (next_tokens, logits, cache)
+    — one decode step with KV/SSM caches; this is what `decode_*`/`long_*`
+    shapes lower.  `positions` is an optional (B,) per-row position vector
+    (continuous batching); omitted, the scalar cache counter applies."""
     model = get_model(cfg)
 
-    def serve_step(params, cache, tokens):
-        logits, cache = model.decode_step(cfg, params, cache, tokens)
+    def serve_step(params, cache, tokens, positions=None):
+        logits, cache = model.decode_step(cfg, params, cache, tokens,
+                                          positions=positions)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return nxt, logits, cache
 
     return serve_step
+
+
+def make_decode_segment(cfg: ArchConfig, seg_len: int):
+    """(params, cache, tokens (B,1), positions (B,)) ->
+       (segment (B, seg_len), last_tokens (B,1), positions (B,), cache).
+
+    A jitted multi-token decode segment: `seg_len` greedy decode steps
+    rolled into one lax.scan, so the host dispatches (and syncs on) ONE
+    device computation per `seg_len` tokens instead of one per token —
+    the producer-initiated token stream of the serving loop.  The cache
+    threads through the scan carry (donate it at the jit boundary for
+    in-place ring-slot updates); per-row positions advance on-device so
+    the stream needs no host round trip between steps."""
+    model = get_model(cfg)
+
+    def segment(params, cache, tokens, positions):
+        def body(carry, _):
+            toks, cache, pos = carry
+            logits, cache = model.decode_step(cfg, params, cache, toks,
+                                              positions=pos)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            return (nxt, cache, pos + 1), nxt[:, 0]
+
+        (last, cache, pos), seq = jax.lax.scan(
+            body, (tokens, cache, jnp.asarray(positions, jnp.int32)),
+            length=seg_len)
+        return seq.T, last, pos, cache        # seq.T: (B, seg_len)
+
+    return segment
+
+
+def make_prefill_into_cache(cfg: ArchConfig):
+    """(params, cache, prompt (P,), row, length) -> (last_logits (V,), cache)
+    — real prompt prefill into one continuous-batching slot (attention-only
+    patterns; see transformer.prefill_into_cache)."""
+    from repro.models import transformer
+
+    def prefill(params, cache, prompt, row, length):
+        return transformer.prefill_into_cache(cfg, params, cache, prompt,
+                                              row, length)
+
+    return prefill

@@ -191,8 +191,11 @@ def prefill_cross_cache(cfg: ArchConfig, params: Params, enc_out: jax.Array,
 
 
 def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
-                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+                tokens: jax.Array,
+                positions=None) -> Tuple[jax.Array, Dict[str, Any]]:
     """One decoder token against self-attn cache + cross KV cache.
+    `positions`: optional (B,) per-row token positions (continuous
+    batching), defaulting to the scalar cache step counter.
 
     As in the decoder-only path (SS Perf iteration D5), the scan reads all
     caches as xs and emits only the tiny new-token self-attn K/V; the
@@ -201,7 +204,8 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
                                        decode_attention_combined)
     x = jnp.take(params["embed"], tokens, axis=0)
     b = x.shape[0]
-    pos = cache["pos"]
+    pos = cache["pos"] if positions is None \
+        else jnp.asarray(positions, jnp.int32)
 
     cache_keys = sorted(k for k in cache if k != "pos")
     xs_cache = {k: cache[k] for k in cache_keys}
@@ -232,7 +236,7 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
     logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
 
-    out_cache: Dict[str, Any] = {"pos": pos + 1,
+    out_cache: Dict[str, Any] = {"pos": cache["pos"] + 1,
                                  "cross_k": cache["cross_k"],
                                  "cross_v": cache["cross_v"]}
     for pos_i, kind in enumerate(cfg.block_pattern):

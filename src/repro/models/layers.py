@@ -228,6 +228,14 @@ def decode_attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
         s = jnp.where(kv_valid[:, None, None, :], s, NEG_INF)
     m = s.max(axis=-1)                                   # (B,KH,G)
     p = jnp.exp(s - m[..., None])
+    if kv_valid is not None:
+        # fully-masked chunks: exp(NEG_INF - NEG_INF) = 1 would leak a
+        # uniform distribution into (l, acc).  The merge's exp(m - m_max)
+        # weight already zeroes it, but per-row positions (continuous
+        # batching) make empty chunks routine — keep the partial itself
+        # exact so any consumer (ring, fused epilogue, tests) can rely
+        # on l == 0 for empty chunks.
+        p = jnp.where(kv_valid[:, None, None, :], p, 0.0)
     l = p.sum(axis=-1)
     acc = jnp.einsum("bkgs,bksd->bkgd", p.astype(k.dtype), v,
                      preferred_element_type=jnp.float32)

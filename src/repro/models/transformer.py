@@ -316,6 +316,11 @@ def _decode_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
     result that is merged - the back-streaming integration point (see
     repro.core.backstream.decode_attention_combined).
 
+    `pos` is the current token's position — a scalar, or a (B,) vector of
+    per-row positions (continuous batching: every slot sits at its own
+    sequence offset; RoPE angles, cache validity and ring-slot writes all
+    follow the row's own clock).
+
     The cache is READ-ONLY here (§Perf iteration D5): the current token's
     contribution is merged as one extra partial (its KV has not been
     written yet), and the returned (k_new, v_new) are ring-slot-written
@@ -324,7 +329,10 @@ def _decode_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
     k_new/v_new in cache layout (B, KH, 1, hd)."""
     from repro.core.backstream import decode_attention_combined
     b = x.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    if pos.ndim == 0:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    else:
+        positions = pos[:, None].astype(jnp.int32)
     q, k_new, v_new = _qkv(cfg, p, x, positions)
     extra = L.single_kv_partial(q, k_new, v_new)
     window = cfg.sliding_window if kind == "local" else 0
@@ -359,9 +367,14 @@ def _decode_mamba(cfg: ArchConfig, p: Params, x: jax.Array,
 
 
 def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
-                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+                tokens: jax.Array,
+                positions: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One decoding step.  tokens: (B, 1) int32 (or embeds (B,1,D)).
-    Returns (logits (B, 1, V), updated cache).
+    `positions`: optional (B,) int32 per-row token positions (continuous
+    batching); defaults to the scalar cache step counter, which assumes
+    every row sits at the same offset.  Returns (logits (B, 1, V),
+    updated cache).
 
     KV caches pass through the layer scan READ-ONLY (xs); the scan emits
     only the per-layer new-token K/V (tiny), which are ring-slot-written
@@ -372,7 +385,8 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
         x = tokens.astype(jnp.dtype(cfg.dtype))
     else:
         x = jnp.take(params["embed"], tokens, axis=0)
-    pos = cache["pos"]
+    pos = cache["pos"] if positions is None \
+        else jnp.asarray(positions, jnp.int32)
 
     cache_keys = sorted(k for k in cache if k != "pos")
     xs = {k: cache[k] for k in cache_keys}
@@ -402,7 +416,7 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
     logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
 
-    out_cache: Dict[str, Any] = {"pos": pos + 1}
+    out_cache: Dict[str, Any] = {"pos": cache["pos"] + 1}
     for pos_i, kind in enumerate(cfg.block_pattern):
         if kind in ("full", "local"):
             max_seq = cache[f"k{pos_i}"].shape[3]
@@ -415,3 +429,62 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
             out_cache[f"conv{pos_i}"] = ys[f"conv{pos_i}"]
             out_cache[f"ssm{pos_i}"] = ys[f"ssm{pos_i}"]
     return constrain(logits, "logits"), out_cache
+
+
+def supports_prefill_into_cache(cfg: ArchConfig) -> bool:
+    """Real prompt prefill needs per-layer K/V capture — attention-only
+    patterns (SSM state handoff is a separate open item)."""
+    return (not cfg.enc_dec
+            and all(k in ("full", "local") for k in cfg.block_pattern))
+
+
+def prefill_into_cache(cfg: ArchConfig, params: Params,
+                       cache: Dict[str, Any], tokens: jax.Array,
+                       row: jax.Array, length: jax.Array
+                       ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Teacher-forced prefill of ONE request's prompt into batch row `row`
+    of the decode cache — the real prefill path of the serving loop
+    (replacing last-token seeding, which dropped all but one prompt
+    token's KV).
+
+    tokens: (P,) int32 padded prompt (junk past `length` is fine: its K/V
+    lands at slots >= length, which the per-row validity clock keeps
+    invisible until decode overwrites them in ring order).  Attention
+    runs through the flash_attention kernel (ops dispatch: Pallas on TPU,
+    oracle on CPU).  Returns (last-token logits (V,), updated cache)."""
+    from repro.kernels import ops
+    assert supports_prefill_into_cache(cfg), cfg.arch_id
+    p_len = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens[None], axis=0)   # (1,P,D)
+    positions = jnp.arange(p_len, dtype=jnp.int32)[None]
+
+    def scan_body(x, block_params):
+        kvs = {}
+        for pos_i, kind in enumerate(cfg.block_pattern):
+            p = block_params[pos_i]
+            q, k, v = _qkv(cfg, p["attn"], x, positions)
+            window = cfg.sliding_window if kind == "local" else 0
+            o = ops.flash_attention(q, k, v, causal=True, window=window)
+            o = o.reshape(1, p_len, cfg.n_heads * cfg.head_dim_)
+            x = x + o @ p["attn"]["wo"]
+            kvs[f"k{pos_i}"] = k.transpose(0, 2, 1, 3)    # (1,KH,P,hd)
+            kvs[f"v{pos_i}"] = v.transpose(0, 2, 1, 3)
+            if cfg.d_ff > 0:
+                x, _ = ffn_layer(cfg, p["ffn"], x, _is_moe_pos(cfg, pos_i))
+        return x, kvs
+
+    x, kvs = lax.scan(scan_body, x, params["blocks"])     # kvs: (L,1,KH,P,hd)
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    x_last = lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)  # (1,1,D)
+    logits = jnp.einsum("bsd,vd->bsv", x_last, params["embed"])[0, 0]
+
+    row = jnp.asarray(row, jnp.int32)
+    out_cache = dict(cache)
+    for pos_i, kind in enumerate(cfg.block_pattern):
+        max_seq = cache[f"k{pos_i}"].shape[3]
+        assert p_len <= max_seq, (p_len, max_seq)
+        for kv in ("k", "v"):
+            c = cache[f"{kv}{pos_i}"]
+            out_cache[f"{kv}{pos_i}"] = lax.dynamic_update_slice(
+                c, kvs[f"{kv}{pos_i}"].astype(c.dtype), (0, row, 0, 0, 0))
+    return logits, out_cache

@@ -28,7 +28,9 @@ def test_hlo_cost_counts_scan_trip_counts():
     w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     compiled = jax.jit(f).lower(x, w).compile()
     want = 2 * 128 ** 3 * 10
-    assert compiled.cost_analysis()["flops"] < want / 5   # XLA undercounts
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca  # jax<0.5 wraps it
+    assert ca["flops"] < want / 5                        # XLA undercounts
     got = hlo_cost.analyze_text(compiled.as_text()).flops
     assert got == pytest.approx(want, rel=0.01)
 

@@ -3,6 +3,10 @@ algebra — the paper's §IV-C memory-correctness invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property-based ring tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ring

@@ -2,6 +2,9 @@
 import math
 
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property-based simulator tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.protocol import (AxleConfig, HardwareConfig, Protocol,
