@@ -4,6 +4,12 @@ device_get).  Reports wall time per emitted token, host syncs per token,
 and the per-step kernel-launch accounting of the fused decode path —
 the three numbers `benchmarks/run.py --json` tracks across PRs.
 
+Two architecture rows: an attention arch (starcoder2) exercising the
+fused flash-decode path, and an SSM arch (mamba2) exercising the
+recurrent-state prefill — both admitted through the SAME real
+prefill-into-cache path (no last-token-seeding fallback exists anymore;
+`BatchedServer` asserts every config supports prefill).
+
 CPU wall times carry host-loop overheads only (no TPU); the syncs/token
 and launch counts are platform-true.
 """
@@ -16,16 +22,16 @@ import numpy as np
 
 from benchmarks.common import Row, print_rows
 
-ARCH = "starcoder2_3b"
+ARCHES = ("starcoder2_3b", "mamba2_370m")
 SLOTS = 2
 MAX_NEW = 16
 N_REQ = 4
 SEG_LEN = 8
 
 
-def _run_server(stream: bool):
+def _run_server(arch: str, stream: bool):
     from repro.launch.serve import BatchedServer, Request
-    server = BatchedServer(ARCH, smoke=True, batch_slots=SLOTS,
+    server = BatchedServer(arch, smoke=True, batch_slots=SLOTS,
                            max_seq=64, protocol="bs", stream=stream,
                            seg_len=SEG_LEN)
     rng = np.random.default_rng(0)
@@ -41,21 +47,31 @@ def _run_server(stream: bool):
 
 def run() -> List[Row]:
     rows: List[Row] = []
-    outs = {}
-    for stream in (False, True):
-        server, dt = _run_server(stream)
-        toks = sum(len(r.generated) for r in server.completed)
-        outs[stream] = {r.rid: tuple(r.generated) for r in server.completed}
-        name = "stream" if stream else "per_token"
-        syncs_per_tok = server.decode_syncs / max(1, toks)
-        rows.append((
-            f"decode_stream.{name}", dt / max(1, toks) * 1e6,
-            f"tokens={toks};decode_syncs={server.decode_syncs};"
-            f"syncs_per_token={syncs_per_tok:.4f};"
-            f"kernel_launches_per_step=1"))     # fused one-shot decode
-    assert outs[True] == outs[False], "streamed tokens diverged"
-    rows.append(("decode_stream.equivalence", 0.0,
-                 f"identical_tokens={int(outs[True] == outs[False])}"))
+    for arch in ARCHES:
+        outs = {}
+        # row names for the attention arch keep their PR-1 form so the
+        # BENCH_decode.json series stays continuous; the SSM rows carry
+        # an arch suffix.
+        suffix = "" if arch == ARCHES[0] else f".{arch}"
+        for stream in (False, True):
+            server, dt = _run_server(arch, stream)
+            toks = sum(len(r.generated) for r in server.completed)
+            outs[stream] = {r.rid: tuple(r.generated)
+                            for r in server.completed}
+            name = "stream" if stream else "per_token"
+            syncs_per_tok = server.decode_syncs / max(1, toks)
+            # launch accounting is per layer kind: attention layers decode
+            # through ONE fused one-shot flash-decode launch each; mamba
+            # layers' ssd_decode_step is plain XLA (no kernel launch).
+            kern = ("kernel_launches_per_step=1" if server.cfg.has_attention
+                    else "decode_kernel=xla_ssd_step")
+            rows.append((
+                f"decode_stream.{name}{suffix}", dt / max(1, toks) * 1e6,
+                f"tokens={toks};decode_syncs={server.decode_syncs};"
+                f"syncs_per_token={syncs_per_tok:.4f};{kern}"))
+        assert outs[True] == outs[False], f"streamed tokens diverged: {arch}"
+        rows.append((f"decode_stream.equivalence{suffix}", 0.0,
+                     f"identical_tokens={int(outs[True] == outs[False])}"))
     return rows
 
 

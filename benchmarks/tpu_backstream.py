@@ -6,21 +6,12 @@ verifies numerical equivalence.  On CPU the wall times only show
 schedule overheads — the dry-run HLO (§Roofline) carries the real signal
 — but the equivalence + bytes-on-wire derivation is platform-true.
 
-DESIGN — fused vs chunked bytes/launch accounting
--------------------------------------------------
-The chunked decode schedule launches one producer kernel per KV chunk
-(n_chunks pallas_calls on TPU) and each launch writes its (acc, m, l)
-partial to HBM — n_chunks * B*H*(hd+2) f32 of statistic traffic — before
-a separate XLA merge reads them all back and normalizes.  The fused
-one-shot kernel (`decode_attention_fused`) makes the chunk axis the
-innermost *grid* dimension of a single launch: the statistics never
-leave VMEM, the normalized output is written once, and the only HBM
-traffic is the unavoidable KV-cache read + B*H*hd output write.  Per
-decode step that removes (n_chunks - 1) launch overheads and
-(2*n_chunks - 1) * B*H*(hd+2) * 4 bytes of round-trip traffic (n_chunks
-partial writes + n_chunks reads, minus the single fused write).  The
-`fused_launches=...` / `stat_roundtrip_bytes=...` fields in the rows
-below derive exactly that.
+Fused vs chunked bytes/launch accounting: see DESIGN.md §3 — in short,
+the chunked schedule is n_chunks launches with
+(2·n_chunks − 1)·B·H·(hd+2)·4 bytes of (acc, m, l) statistic round trips
+through HBM; the fused one-shot kernel is ONE launch whose statistics
+never leave VMEM.  The `fused_launches=...` / `stat_roundtrip_bytes=...`
+fields in the rows below derive exactly that.
 """
 from __future__ import annotations
 

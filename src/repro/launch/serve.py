@@ -30,10 +30,15 @@ Two host loops over the same jitted steps:
                             device-side (last tokens / positions never
                             round-trip through the host).
 
-Prompt admission runs a real prefill — the full prompt through the
-flash_attention kernel, per-layer K/V written into the slot's cache rows
-— instead of the old last-token seeding that dropped every other prompt
-token's KV.
+Prompt admission runs a real prefill for EVERY registered architecture —
+no degradation path.  Attention layers push the full prompt through the
+flash_attention kernel and write per-layer K/V into the slot's cache
+rows; mamba layers capture the SSD scan's final recurrent state and the
+causal conv's trailing input window (transformer.prefill_into_cache);
+encoder-decoder configs additionally run the encoder and write per-slot
+cross-attention K/V (encdec.prefill_into_cache).  The old last-token
+seeding — which dropped every other prompt token's KV and pinned all
+rows to a scalar position clock — is gone.
 """
 from __future__ import annotations
 
@@ -61,9 +66,23 @@ PROTOCOLS = {"bs": OffloadProtocol.BS, "axle": OffloadProtocol.AXLE,
 
 @dataclasses.dataclass
 class Request:
+    """One serving request.
+
+    prompt    — (prompt_len,) int32 token ids; for encoder-decoder archs
+                these are the DECODER prompt (task/language tokens).
+    max_new   — tokens to generate; the first is produced by the prefill
+                itself (greedy over the last prompt position's logits).
+    embeds    — encoder-decoder only: (enc_len, d_model) frame embeddings
+                from the (stubbed) audio frontend.  Must span the cache's
+                full enc_len; None falls back to silence (zeros).
+    generated — filled by the server: the `max_new` greedy tokens, in
+                order.  Identical across per-token/streamed loops and
+                independent of which slot or batch the request shared
+                (per-row position clocks)."""
     rid: int
     prompt: np.ndarray            # (prompt_len,) int32
     max_new: int
+    embeds: Optional[np.ndarray] = None
     generated: Optional[List[int]] = None
 
 
@@ -78,13 +97,48 @@ def _prefill_bucket(n: int, cap: int) -> int:
 
 
 class BatchedServer:
-    """Slot-based continuous batching over a fixed decode batch."""
+    """Slot-based continuous batching over a fixed decode batch.
+
+    Each of `batch_slots` rows of the decode cache is a serving slot: a
+    queued Request is admitted into a free slot by a real prefill
+    (`_prefill`), decodes greedily until its `max_new` budget is spent,
+    then retires and frees the slot for the next queued request.
+
+    Per-row position-clock INVARIANT: `positions[s]` is the sequence
+    position of the token currently held in `tokens[s]` — i.e. the
+    number of tokens (prompt + generated) that precede it.  It starts at
+    `len(prompt)` right after prefill (the first generated token sits at
+    position P) and advances by one per decode step, per row, never
+    globally.  Everything position-dependent — RoPE angles, cache slot
+    validity (the cache holds tokens [0, pos), so valid slots are
+    strictly `slot < pos`; the current token rides as the merged
+    extra partial until its ring-slot write), sliding-window bounds,
+    ring-slot writes at `pos % max_seq` — is driven by this (B,) vector,
+    which is what makes
+    a request's tokens independent of its slot and of whatever the other
+    slots are doing.  A scalar step counter cannot express a batch whose
+    rows sit at different offsets; the cache's `pos` scalar is kept only
+    for the single-sequence `decode_step(positions=None)` path.
+
+    Prompts are padded to power-of-two buckets (`_prefill_bucket`) so the
+    jitted prefill traces once per bucket; junk past the true length is
+    harmless by construction (see transformer.prefill_into_cache).
+
+    Two drive modes (`run_until_drained` dispatches on `stream`):
+      per-token — `step()`: one jitted decode step + one host sync per
+                  token; the bulk-synchronous baseline.
+      streamed  — `run_stream()`: jitted `seg_len`-token segments with
+                  double-buffered device_get; ~1 host sync per seg_len
+                  tokens, dispatch-time slot accounting (greedy decode
+                  is deterministic, so a segment's token usage is known
+                  when it is dispatched).  Both modes emit identical
+                  tokens.
+    """
 
     def __init__(self, arch_id: str, *, smoke: bool = True,
                  batch_slots: int = 4, max_seq: int = 256,
                  protocol: str = "axle", chunks_per_shard: int = 1,
-                 mesh=None, seg_len: int = 8, stream: bool = False,
-                 prefill: bool = True):
+                 mesh=None, seg_len: int = 8, stream: bool = False):
         self.cfg = (get_smoke_config(arch_id) if smoke
                     else get_config(arch_id))
         self.model = get_model(self.cfg)
@@ -104,11 +158,14 @@ class BatchedServer:
         self.segment_fn = jax.jit(
             steps_lib.make_decode_segment(self.cfg, seg_len),
             donate_argnums=(1,))
-        self.prefill_fn = None
-        if prefill and transformer.supports_prefill_into_cache(self.cfg):
-            self.prefill_fn = jax.jit(
-                steps_lib.make_prefill_into_cache(self.cfg),
-                donate_argnums=(1,))
+        # every registered config has a real prefill path (attention,
+        # SSM/hybrid state capture, enc-dec) — admission never degrades
+        # to last-token seeding.
+        assert transformer.supports_prefill_into_cache(self.cfg), \
+            self.cfg.arch_id
+        self.prefill_fn = jax.jit(
+            steps_lib.make_prefill_into_cache(self.cfg),
+            donate_argnums=(1,))
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.tokens = np.zeros((batch_slots, 1), np.int32)
@@ -131,46 +188,51 @@ class BatchedServer:
         return self.rules.mesh if self.rules is not None else _null()
 
     def _prefill(self, slot: int, req: Request) -> int:
-        """Real prefill: the whole prompt through the flash-attention
-        kernel, per-layer K/V written into this slot's cache rows.
-        Returns the first generated token."""
+        """Real prefill: the whole prompt through the jitted prefill step
+        — per-layer K/V and/or recurrent (conv, ssm) states written into
+        this slot's cache rows; enc-dec archs additionally run the
+        encoder on the request's frames and fill the slot's cross-KV.
+        Returns the first generated token (greedy over the last prompt
+        position's logits)."""
         plen = len(req.prompt)
         assert plen <= self.max_seq, (plen, self.max_seq)
         padded = np.zeros((_prefill_bucket(plen, self.max_seq),), np.int32)
         padded[:plen] = req.prompt
+        args = ()
+        if self.cfg.enc_dec:
+            emb = req.embeds
+            if emb is None:       # silence: the stub frontend's zero frames
+                emb = np.zeros((self.cfg.enc_len, self.cfg.d_model),
+                               np.float32)
+            assert emb.shape == (self.cfg.enc_len, self.cfg.d_model), \
+                emb.shape
+            args = (jnp.asarray(emb)[None],)
         with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
             logits, self.cache = self.prefill_fn(
-                self.params, self.cache, jnp.asarray(padded), slot, plen)
+                self.params, self.cache, jnp.asarray(padded), slot, plen,
+                *args)
         self.host_syncs += 1
         return int(jnp.argmax(logits))
 
     def _fill_slots(self) -> List[int]:
-        """Admit queued requests into free slots; returns the slots that
-        were (re)seeded this call."""
+        """Admit queued requests into free slots via real prefill; returns
+        the slots that were (re)seeded this call."""
         seeded: List[int] = []
         for s in range(self.batch):
             if self.active[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[s] = req
-                if self.prefill_fn is not None:
-                    first = self._prefill(s, req)
-                    req.generated.append(first)
-                    self.tokens_emitted += 1
-                    self.tokens[s, 0] = first
-                    # the first generated token sits at position len(prompt)
-                    self.positions[s] = len(req.prompt)
-                    self.remaining[s] = req.max_new - 1
-                    if self.remaining[s] <= 0:
-                        self.completed.append(req)
-                        self.active[s] = None
-                        continue
-                else:
-                    # archs without a prefill path (SSM/hybrid state handoff
-                    # is an open item): seed with the last prompt token at
-                    # position 0 — the smoke-scale approximation.
-                    self.tokens[s, 0] = int(req.prompt[-1])
-                    self.positions[s] = 0
-                    self.remaining[s] = req.max_new
+                first = self._prefill(s, req)
+                req.generated.append(first)
+                self.tokens_emitted += 1
+                self.tokens[s, 0] = first
+                # the first generated token sits at position len(prompt)
+                self.positions[s] = len(req.prompt)
+                self.remaining[s] = req.max_new - 1
+                if self.remaining[s] <= 0:
+                    self.completed.append(req)
+                    self.active[s] = None
+                    continue
                 seeded.append(s)
         return seeded
 
@@ -303,8 +365,13 @@ def main() -> int:
     t0 = time.time()
     for i in range(args.requests):
         plen = int(rng.integers(4, 12))
+        embeds = None
+        if server.cfg.enc_dec:    # stub audio frontend: random frames
+            embeds = rng.standard_normal(
+                (server.cfg.enc_len, server.cfg.d_model)).astype(np.float32)
         server.submit(Request(i, rng.integers(
-            1, server.cfg.vocab, plen).astype(np.int32), args.max_new))
+            1, server.cfg.vocab, plen).astype(np.int32), args.max_new,
+            embeds=embeds))
     server.run_until_drained()
     dt = time.time() - t0
     toks = sum(len(r.generated) for r in server.completed)

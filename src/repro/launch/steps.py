@@ -92,9 +92,27 @@ def make_decode_segment(cfg: ArchConfig, seg_len: int):
 
 
 def make_prefill_into_cache(cfg: ArchConfig):
-    """(params, cache, prompt (P,), row, length) -> (last_logits (V,), cache)
-    — real prompt prefill into one continuous-batching slot (attention-only
-    patterns; see transformer.prefill_into_cache)."""
+    """Real prompt prefill into one continuous-batching slot, for EVERY
+    registered architecture (attention, SSM/hybrid, encoder-decoder).
+
+    Decoder-only: (params, cache, prompt (P,), row, length) ->
+    (last_logits (V,), cache) — per-layer K/V and/or (conv, ssm) state
+    capture; see transformer.prefill_into_cache.
+
+    Encoder-decoder: (params, cache, prompt (P,), row, length,
+    enc_embeds (1, enc_len, D)) -> (last_logits (V,), cache) — runs the
+    encoder on the request's frames, writes its per-layer cross-KV into
+    the slot row, and prefills the decoder self-attention cache; see
+    encdec.prefill_into_cache."""
+    if cfg.enc_dec:
+        from repro.models import encdec
+
+        def prefill_ed(params, cache, prompt, row, length, enc_embeds):
+            return encdec.prefill_into_cache(cfg, params, cache, prompt,
+                                             row, length, enc_embeds)
+
+        return prefill_ed
+
     from repro.models import transformer
 
     def prefill(params, cache, prompt, row, length):

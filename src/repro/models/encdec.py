@@ -173,21 +173,96 @@ def abstract_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
         functools.partial(init_cache, cfg, batch_size, max_seq, enc_len))
 
 
+def _cross_kv(cfg: ArchConfig, cross_p: Params, enc_out: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """ONE decoder block's cross-attention K/V from the encoder output,
+    in the flash-decoding cache layout (B, KH, E, hd) — the single
+    definition both the whole-batch precompute and the per-slot prefill
+    write through."""
+    kh, hd = cfg.n_kv_heads, cfg.head_dim_
+    b, e, _ = enc_out.shape
+    k = (enc_out @ cross_p["wk"]).reshape(b, e, kh, hd).transpose(0, 2, 1, 3)
+    v = (enc_out @ cross_p["wv"]).reshape(b, e, kh, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
 def prefill_cross_cache(cfg: ArchConfig, params: Params, enc_out: jax.Array,
                         cache: Dict[str, Any]) -> Dict[str, Any]:
     """Compute cross-attention K/V for every decoder layer from enc_out."""
-    kh, hd = cfg.n_kv_heads, cfg.head_dim_
-    b, e, _ = enc_out.shape
-
-    def per_block(cross_p):
-        k = (enc_out @ cross_p["wk"]).reshape(b, e, kh, hd).transpose(0, 2, 1, 3)
-        v = (enc_out @ cross_p["wv"]).reshape(b, e, kh, hd).transpose(0, 2, 1, 3)
-        return k, v
-
-    ks, vs = jax.vmap(per_block)(params["cross"])
+    ks, vs = jax.vmap(lambda cp: _cross_kv(cfg, cp, enc_out))(params["cross"])
     out = dict(cache)
     out["cross_k"], out["cross_v"] = ks, vs
     return out
+
+
+def prefill_into_cache(cfg: ArchConfig, params: Params,
+                       cache: Dict[str, Any], tokens: jax.Array,
+                       row: jax.Array, length: jax.Array,
+                       enc_embeds: jax.Array
+                       ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Real encoder-decoder prefill of ONE request into batch row `row` —
+    what takes whisper-style serving out of `BatchedServer` fallback mode.
+
+    Three phases, mirroring the decoder-only path
+    (transformer.prefill_into_cache) plus the encoder side:
+
+      1. encoder pass over the request's frame embeddings
+         (enc_embeds: (1, enc_len, D) — the stub audio frontend's output);
+      2. per-layer cross-attention K/V projected from the encoder output
+         and written into this slot's rows of cache['cross_k'/'cross_v']
+         (previously a whole-batch precompute, incompatible with
+         continuous batching where every slot serves a different request);
+      3. decoder self-attention prefill: the whole (padded) decoder
+         prompt through the flash_attention kernel, per-layer K/V written
+         into the slot's cache rows.  Junk past `length` lands at slots
+         >= length, invisible under the per-row position clock.
+
+    Returns (last-token logits (V,), updated cache)."""
+    from repro.kernels import ops
+    p_len = tokens.shape[0]
+    enc_out = encode(cfg, params, enc_embeds, remat=False)  # (1, E, D)
+    e = enc_out.shape[1]
+
+    x = jnp.take(params["embed"], tokens[None], axis=0)     # (1, P, D)
+    positions = jnp.arange(p_len, dtype=jnp.int32)[None]
+
+    def scan_body(x, inp):
+        bp, cross_p = inp
+        states = {}
+        for pos_i, kind in enumerate(cfg.block_pattern):
+            p = bp[pos_i]
+            q, k, v = T._qkv(cfg, p["attn"], x, positions)
+            window = cfg.sliding_window if kind == "local" else 0
+            o = ops.flash_attention(q, k, v, causal=True, window=window)
+            x = x + o.reshape(1, p_len, -1) @ p["attn"]["wo"]
+            states[f"k{pos_i}"] = k.transpose(0, 2, 1, 3)   # (1,KH,P,hd)
+            states[f"v{pos_i}"] = v.transpose(0, 2, 1, 3)
+            x = _cross_attn(cfg, cross_p, x, enc_out)
+            x, _ = T.ffn_layer(cfg, p["ffn"], x, False)
+        # this block's cross K/V for the decode loop (static per request)
+        states["cross_k"], states["cross_v"] = \
+            _cross_kv(cfg, cross_p, enc_out)                # (1,KH,E,hd)
+        return x, states
+
+    x, states = lax.scan(
+        scan_body, x, (params["dec_blocks"], params["cross"]))
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    x_last = lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    logits = jnp.einsum("bsd,vd->bsv", x_last, params["embed"])[0, 0]
+
+    row = jnp.asarray(row, jnp.int32)
+    out_cache = dict(cache)
+    for key, val in states.items():                         # (L,1,KH,*,hd)
+        c = out_cache[key]
+        if key.startswith("cross"):
+            # decode attends over the FULL cross cache row — a partial
+            # write would leak the previous occupant's trailing frames
+            assert e == c.shape[3], (e, c.shape)
+        else:
+            assert p_len <= c.shape[3], (p_len, c.shape)
+        out_cache[key] = lax.dynamic_update_slice(
+            c, val.astype(c.dtype), (0, row, 0, 0, 0))
+    return logits, out_cache
 
 
 def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],

@@ -182,17 +182,26 @@ def ffn_layer(cfg: ArchConfig, p: Params, x: jax.Array, moe: bool
     return x + y, jnp.zeros((), jnp.float32)
 
 
-def mamba_layer(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
-    b, s, _ = x.shape
-    nh, hp = cfg.n_ssm_heads, cfg.ssm_head_dim
+def _mamba_proj(cfg: ArchConfig, p: Params, x: jax.Array):
+    """Shared input projections of the mamba sublayer: returns
+    (z gate, conv INPUT, B, C, dt (softplus, f32), A) for the train /
+    decode / prefill variants, which differ only in how they run the
+    conv + SSD recurrence."""
     hx = L.rms_norm(x, p["ln"], cfg.norm_eps)
     z = jax.nn.silu(hx @ p["w_z"])
-    xc = hx @ p["w_x"]
-    xc, _ = L.causal_conv1d(xc, p["conv_w"])
+    xin = hx @ p["w_x"]
     Bm = hx @ p["w_B"]
     Cm = hx @ p["w_C"]
     dt = jax.nn.softplus((hx @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
     A = -jnp.exp(p["A_log"])
+    return z, xin, Bm, Cm, dt, A
+
+
+def mamba_layer(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    nh, hp = cfg.n_ssm_heads, cfg.ssm_head_dim
+    z, xin, Bm, Cm, dt, A = _mamba_proj(cfg, p, x)
+    xc, _ = L.causal_conv1d(xin, p["conv_w"])
     y, _ = L.ssd_chunked(xc.reshape(b, s, nh, hp), dt, A, Bm, Cm)
     y = y + (xc.reshape(b, s, nh, hp)
              * p["D"][None, None, :, None].astype(xc.dtype))
@@ -349,17 +358,11 @@ def _decode_mamba(cfg: ArchConfig, p: Params, x: jax.Array,
                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     b = x.shape[0]
     nh, hp = cfg.n_ssm_heads, cfg.ssm_head_dim
-    hx = L.rms_norm(x, p["ln"], cfg.norm_eps)
-    z = jax.nn.silu(hx @ p["w_z"])
-    xc = hx @ p["w_x"]
-    xc, conv_state = L.causal_conv1d(xc, p["conv_w"], conv_state)
-    Bm = (hx @ p["w_B"])[:, 0]
-    Cm = (hx @ p["w_C"])[:, 0]
-    dt = jax.nn.softplus((hx @ p["w_dt"]).astype(jnp.float32)
-                         + p["dt_bias"])[:, 0]
-    A = -jnp.exp(p["A_log"])
+    z, xin, Bm, Cm, dt, A = _mamba_proj(cfg, p, x)
+    xc, conv_state = L.causal_conv1d(xin, p["conv_w"], conv_state)
     y, ssm_state = L.ssd_decode_step(
-        ssm_state, xc[:, 0].reshape(b, nh, hp), dt, A, Bm, Cm)
+        ssm_state, xc[:, 0].reshape(b, nh, hp), dt[:, 0], A,
+        Bm[:, 0], Cm[:, 0])
     y = y + (xc[:, 0].reshape(b, nh, hp)
              * p["D"][None, :, None].astype(xc.dtype))
     y = (y.reshape(b, 1, -1) * z).astype(x.dtype)
@@ -432,10 +435,54 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
 
 
 def supports_prefill_into_cache(cfg: ArchConfig) -> bool:
-    """Real prompt prefill needs per-layer K/V capture — attention-only
-    patterns (SSM state handoff is a separate open item)."""
-    return (not cfg.enc_dec
-            and all(k in ("full", "local") for k in cfg.block_pattern))
+    """Every registered architecture has a real prompt-prefill path into
+    the continuous-batching decode cache: attention layers capture per-
+    layer K/V, mamba layers capture the (conv_state, ssm_state) pair from
+    the chunked SSD scan's final recurrent state, and encoder-decoder
+    configs go through `encdec.prefill_into_cache` (encoder pass +
+    per-row cross-KV + decoder self-attn prefill).  Kept as a function so
+    a future pattern kind degrades loudly instead of silently."""
+    if cfg.enc_dec:
+        return all(k in ("full", "local") for k in cfg.block_pattern)
+    return all(k in ("full", "local", "mamba") for k in cfg.block_pattern)
+
+
+def _prefill_mamba(cfg: ArchConfig, p: Params, x: jax.Array,
+                   length: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Whole-prompt mamba sublayer with recurrent-state capture: the SSD
+    scan (kernels.ops.ssd_scan: Pallas on TPU, sequential oracle on CPU)
+    returns its final (H, P, N) state and the causal conv exposes its
+    trailing width-1 input window, so decode can resume from token
+    `length` exactly where `ssd_decode_step` would have landed stepping
+    the prompt one token at a time.
+
+    x is the PADDED prompt (B, S, D); `length` masks the junk tail out of
+    the recurrence: dt is zeroed past `length`, making the SSD update a
+    no-op there (decay exp(0·A) = 1, update dt·x·Bᵀ = 0), and the conv
+    state is sliced to the window ending at `length` (zero-padded on the
+    left for prompts shorter than the conv width, matching the zero
+    initial conv state of the per-token path).
+
+    Returns (x_out (B,S,D), conv_state (B,W-1,d_inner),
+    ssm_state (B,NH,P,N) f32)."""
+    from repro.kernels import ops
+    b, s, _ = x.shape
+    nh, hp, width = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.conv_width
+    z, xin, Bm, Cm, dt, A = _mamba_proj(cfg, p, x)
+    pad = jnp.concatenate(
+        [jnp.zeros((b, width - 1, xin.shape[-1]), xin.dtype), xin], axis=1)
+    conv_state = lax.dynamic_slice(
+        pad, (0, jnp.asarray(length, jnp.int32), 0),
+        (b, width - 1, xin.shape[-1]))
+    xc, _ = L.causal_conv1d(xin, p["conv_w"])
+    in_prompt = jnp.arange(s) < jnp.asarray(length, jnp.int32)
+    dt = jnp.where(in_prompt[None, :, None], dt, 0.0)
+    y, ssm_state = ops.ssd_scan(xc.reshape(b, s, nh, hp), dt, A, Bm, Cm)
+    y = y + (xc.reshape(b, s, nh, hp)
+             * p["D"][None, None, :, None].astype(xc.dtype))
+    y = (y.reshape(b, s, -1) * z).astype(x.dtype)
+    return x + y @ p["out_proj"], conv_state, ssm_state
 
 
 def prefill_into_cache(cfg: ArchConfig, params: Params,
@@ -447,33 +494,43 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
     (replacing last-token seeding, which dropped all but one prompt
     token's KV).
 
-    tokens: (P,) int32 padded prompt (junk past `length` is fine: its K/V
-    lands at slots >= length, which the per-row validity clock keeps
-    invisible until decode overwrites them in ring order).  Attention
-    runs through the flash_attention kernel (ops dispatch: Pallas on TPU,
-    oracle on CPU).  Returns (last-token logits (V,), updated cache)."""
+    tokens: (P,) int32 padded prompt.  Junk past `length` is fine for
+    every layer kind: attention K/V of junk tokens lands at slots >=
+    length, which the per-row validity clock keeps invisible until decode
+    overwrites them in ring order; mamba layers mask the junk out of the
+    recurrence itself (see `_prefill_mamba` — a recurrent state, unlike a
+    KV slot, has no validity clock to hide behind).  Attention runs
+    through the flash_attention kernel and the SSD scan through ssd_scan
+    (ops dispatch: Pallas on TPU, oracle on CPU).  Returns (last-token
+    logits (V,), updated cache)."""
     from repro.kernels import ops
+    assert not cfg.enc_dec, "enc-dec prefill lives in encdec.prefill_into_cache"
     assert supports_prefill_into_cache(cfg), cfg.arch_id
     p_len = tokens.shape[0]
     x = jnp.take(params["embed"], tokens[None], axis=0)   # (1,P,D)
     positions = jnp.arange(p_len, dtype=jnp.int32)[None]
 
     def scan_body(x, block_params):
-        kvs = {}
+        states = {}
         for pos_i, kind in enumerate(cfg.block_pattern):
             p = block_params[pos_i]
-            q, k, v = _qkv(cfg, p["attn"], x, positions)
-            window = cfg.sliding_window if kind == "local" else 0
-            o = ops.flash_attention(q, k, v, causal=True, window=window)
-            o = o.reshape(1, p_len, cfg.n_heads * cfg.head_dim_)
-            x = x + o @ p["attn"]["wo"]
-            kvs[f"k{pos_i}"] = k.transpose(0, 2, 1, 3)    # (1,KH,P,hd)
-            kvs[f"v{pos_i}"] = v.transpose(0, 2, 1, 3)
+            if kind in ("full", "local"):
+                q, k, v = _qkv(cfg, p["attn"], x, positions)
+                window = cfg.sliding_window if kind == "local" else 0
+                o = ops.flash_attention(q, k, v, causal=True, window=window)
+                o = o.reshape(1, p_len, cfg.n_heads * cfg.head_dim_)
+                x = x + o @ p["attn"]["wo"]
+                states[f"k{pos_i}"] = k.transpose(0, 2, 1, 3)  # (1,KH,P,hd)
+                states[f"v{pos_i}"] = v.transpose(0, 2, 1, 3)
+            elif kind == "mamba":
+                x, conv_s, ssm_s = _prefill_mamba(cfg, p["mamba"], x, length)
+                states[f"conv{pos_i}"] = conv_s               # (1,W-1,di)
+                states[f"ssm{pos_i}"] = ssm_s                 # (1,NH,P,N)
             if cfg.d_ff > 0:
                 x, _ = ffn_layer(cfg, p["ffn"], x, _is_moe_pos(cfg, pos_i))
-        return x, kvs
+        return x, states
 
-    x, kvs = lax.scan(scan_body, x, params["blocks"])     # kvs: (L,1,KH,P,hd)
+    x, states = lax.scan(scan_body, x, params["blocks"])  # (L, 1, ...) each
     x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
     x_last = lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)  # (1,1,D)
     logits = jnp.einsum("bsd,vd->bsv", x_last, params["embed"])[0, 0]
@@ -481,10 +538,15 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
     row = jnp.asarray(row, jnp.int32)
     out_cache = dict(cache)
     for pos_i, kind in enumerate(cfg.block_pattern):
-        max_seq = cache[f"k{pos_i}"].shape[3]
-        assert p_len <= max_seq, (p_len, max_seq)
-        for kv in ("k", "v"):
-            c = cache[f"{kv}{pos_i}"]
-            out_cache[f"{kv}{pos_i}"] = lax.dynamic_update_slice(
-                c, kvs[f"{kv}{pos_i}"].astype(c.dtype), (0, row, 0, 0, 0))
+        if kind in ("full", "local"):
+            max_seq = cache[f"k{pos_i}"].shape[3]
+            assert p_len <= max_seq, (p_len, max_seq)
+            keys = (f"k{pos_i}", f"v{pos_i}")
+        else:
+            keys = (f"conv{pos_i}", f"ssm{pos_i}")
+        for key in keys:
+            c = cache[key]
+            upd = states[key].astype(c.dtype)
+            out_cache[key] = lax.dynamic_update_slice(
+                c, upd, (0, row) + (0,) * (c.ndim - 2))
     return logits, out_cache
