@@ -10,13 +10,20 @@ recurrent-state prefill — both admitted through the SAME real
 prefill-into-cache path (no last-token-seeding fallback exists anymore;
 `BatchedServer` asserts every config supports prefill).
 
+Each tracked arch additionally runs a `sampling=top_p` streamed row:
+per-slot stochastic sampling through the device-side PRNG chains
+(DESIGN.md §6).  Sampling is plain XLA fused into the logits epilogue —
+no extra kernel launches — and budget-terminated rows keep dispatch-time
+slot accounting, so syncs/token must equal the greedy row EXACTLY (the
+row asserts it).
+
 CPU wall times carry host-loop overheads only (no TPU); the syncs/token
 and launch counts are platform-true.
 """
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -27,18 +34,24 @@ SLOTS = 2
 MAX_NEW = 16
 N_REQ = 4
 SEG_LEN = 8
+TOP_P = 0.9
+TEMPERATURE = 0.8
 
 
-def _run_server(arch: str, stream: bool):
-    from repro.launch.serve import BatchedServer, Request
+def _run_server(arch: str, stream: bool, sampled: bool = False):
+    from repro.launch.serve import BatchedServer, Request, SamplingParams
     server = BatchedServer(arch, smoke=True, batch_slots=SLOTS,
                            max_seq=64, protocol="bs", stream=stream,
                            seg_len=SEG_LEN)
     rng = np.random.default_rng(0)
     for i in range(N_REQ):
         plen = int(rng.integers(3, 7))
+        sampling: Optional[SamplingParams] = SamplingParams(
+            temperature=TEMPERATURE, top_p=TOP_P, seed=i) if sampled \
+            else None
         server.submit(Request(i, rng.integers(
-            1, server.cfg.vocab, plen).astype(np.int32), MAX_NEW))
+            1, server.cfg.vocab, plen).astype(np.int32), MAX_NEW,
+            sampling=sampling))
     t0 = time.perf_counter()
     server.run_until_drained()
     dt = time.perf_counter() - t0
@@ -53,6 +66,7 @@ def run() -> List[Row]:
         # BENCH_decode.json series stays continuous; the SSM rows carry
         # an arch suffix.
         suffix = "" if arch == ARCHES[0] else f".{arch}"
+        greedy_syncs = {}
         for stream in (False, True):
             server, dt = _run_server(arch, stream)
             toks = sum(len(r.generated) for r in server.completed)
@@ -60,6 +74,7 @@ def run() -> List[Row]:
                             for r in server.completed}
             name = "stream" if stream else "per_token"
             syncs_per_tok = server.decode_syncs / max(1, toks)
+            greedy_syncs[stream] = syncs_per_tok
             # launch accounting is per layer kind: attention layers decode
             # through ONE fused one-shot flash-decode launch each; mamba
             # layers' ssd_decode_step is plain XLA (no kernel launch).
@@ -72,6 +87,19 @@ def run() -> List[Row]:
         assert outs[True] == outs[False], f"streamed tokens diverged: {arch}"
         rows.append((f"decode_stream.equivalence{suffix}", 0.0,
                      f"identical_tokens={int(outs[True] == outs[False])}"))
+        # streamed top-p sampling: same budgets, same slot accounting —
+        # the sync count per token must not move vs greedy streaming
+        server, dt = _run_server(arch, True, sampled=True)
+        toks = sum(len(r.generated) for r in server.completed)
+        syncs_per_tok = server.decode_syncs / max(1, toks)
+        assert syncs_per_tok == greedy_syncs[True], \
+            (arch, syncs_per_tok, greedy_syncs[True])
+        rows.append((
+            f"decode_stream.stream.top_p{suffix}", dt / max(1, toks) * 1e6,
+            f"tokens={toks};decode_syncs={server.decode_syncs};"
+            f"syncs_per_token={syncs_per_tok:.4f};sampling=top_p;"
+            f"top_p={TOP_P};temperature={TEMPERATURE};"
+            f"syncs_match_greedy=1;extra_kernel_launches=0"))
     return rows
 
 

@@ -10,6 +10,7 @@ CONFIG = ArchConfig(
     arch_id="jamba_1_5_large", family="hybrid",
     n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=24576,
     vocab=65536, head_dim=128,
+    eos_token=2,               # </s>
     n_experts=16, top_k=2, moe_every=2,
     block_pattern=_PATTERN,
     ssm_state=128, ssm_head_dim=64, ssm_expand=2,
@@ -20,6 +21,7 @@ SMOKE = ArchConfig(
     arch_id="jamba_1_5_large_smoke", family="hybrid",
     n_layers=8, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
     vocab=512, head_dim=16,
+    eos_token=2,
     n_experts=4, top_k=2, moe_every=2,
     block_pattern=_PATTERN,
     ssm_state=16, ssm_head_dim=16, ssm_expand=2,

@@ -6,6 +6,7 @@ CONFIG = ArchConfig(
     arch_id="phi3_5_moe_42b", family="moe",
     n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=6400,
     vocab=32064, head_dim=128,
+    eos_token=32000,               # <|endoftext|>
     n_experts=16, top_k=2, moe_every=1,
     block_pattern=("full",), rope_theta=10_000.0,
 )
@@ -14,6 +15,7 @@ SMOKE = ArchConfig(
     arch_id="phi3_5_moe_42b_smoke", family="moe",
     n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
     vocab=512, head_dim=16,
+    eos_token=2,
     n_experts=4, top_k=2, moe_every=1,
     block_pattern=("full",),
 )

@@ -6,6 +6,7 @@ CONFIG = ArchConfig(
     arch_id="qwen2_vl_2b", family="vlm",
     n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2, d_ff=8960,
     vocab=151936, head_dim=128, mrope=True, frontend="patch",
+    eos_token=151645,               # <|im_end|>
     block_pattern=("full",),
 )
 
@@ -13,5 +14,6 @@ SMOKE = ArchConfig(
     arch_id="qwen2_vl_2b_smoke", family="vlm",
     n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
     vocab=512, head_dim=16, mrope=True, frontend="patch",
+    eos_token=2,
     block_pattern=("full",),
 )

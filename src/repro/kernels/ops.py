@@ -8,7 +8,7 @@ Pallas interpret mode (the correctness path the tests sweep).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +62,51 @@ def decode_attention_fused(q, k, v, pos, extra=None, *, window: int = 0,
                                           window=window, blk_c=blk_c,
                                           interpret=interpret)
     return _ref.decode_fused_reference(q, k, v, pos, extra, window=window)
+
+
+class BatchedSampling(NamedTuple):
+    """Per-slot sampling parameters, vectorized over the decode batch —
+    the device-side image of one `SamplingParams` per serving slot.
+    All leaves are (B,)-shaped so the pytree rides through jitted decode
+    segments (and their lax.scan carries) without retracing per request.
+
+    temperature <= 0 (or top_k == 1) marks a slot greedy; top_k == 0,
+    top_p == 1 and min_p == 0 disable the respective filter."""
+    temperature: jax.Array        # (B,) f32
+    top_k: jax.Array              # (B,) i32
+    top_p: jax.Array              # (B,) f32
+    min_p: jax.Array              # (B,) f32
+
+
+def greedy_sampling(batch: int) -> BatchedSampling:
+    """All-slots-greedy parameters (the historical serve-loop default)."""
+    return BatchedSampling(
+        temperature=jnp.zeros((batch,), jnp.float32),
+        top_k=jnp.zeros((batch,), jnp.int32),
+        top_p=jnp.ones((batch,), jnp.float32),
+        min_p=jnp.zeros((batch,), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("vocab",))
+def sample_tokens(logits, params: BatchedSampling, keys, *,
+                  vocab: int = 0) -> jax.Array:
+    """Per-slot stochastic token selection.  logits: (B, V); params:
+    BatchedSampling of (B,) leaves; keys: (B, 2) uint32 — one PRNG key
+    per slot; vocab: true vocabulary width when V is padded (stochastic
+    rows never emit a pad id >= vocab; 0 disables the bound).  Returns
+    (B,) int32 next tokens.
+
+    Semantics live in `ref.sample_tokens_reference` (the jnp oracle IS
+    the implementation): greedy rows reduce to argmax(logits) bitwise,
+    sampled rows are Gumbel-argmax over the temperature/top_k/top_p/min_p
+    filtered distribution.  There is no Pallas lowering — the math is one
+    O(B·V) sort plus elementwise work, plain XLA on every backend, so by
+    construction sampling adds no kernel launches to the streamed
+    segment (benchmarks/decode_stream.py records this accounting next to
+    its asserted syncs/token figures)."""
+    return _ref.sample_tokens_reference(
+        logits, params.temperature, params.top_k, params.top_p,
+        params.min_p, keys, vocab)
 
 
 @functools.partial(jax.jit, static_argnames=("blk_q", "blk_n", "interpret"))

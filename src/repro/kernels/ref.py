@@ -106,6 +106,80 @@ def decode_fused_reference(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # --------------------------------------------------------------------------
+# Per-slot stochastic sampling (the serve loop's consumer-side task)
+# --------------------------------------------------------------------------
+
+def sample_tokens_reference(logits: jax.Array, temperature: jax.Array,
+                            top_k: jax.Array, top_p: jax.Array,
+                            min_p: jax.Array, keys: jax.Array,
+                            vocab: int = 0) -> jax.Array:
+    """Vectorized-over-slots stochastic token selection — the oracle for
+    `ops.sample_tokens` and the single definition of its semantics.
+
+    logits: (B, V); temperature/top_p/min_p: (B,) f32; top_k: (B,) i32;
+    keys: (B, 2) uint32 — one independent PRNG key per slot, so one row's
+    randomness never depends on another row's key (per-slot independence,
+    the continuous-batching requirement).  `vocab`: the TRUE vocabulary
+    width when V is the Megatron-padded vocab (0 = no bound) — stochastic
+    rows never sample a pad id (ids >= vocab are -inf'd BEFORE the
+    softmax, so pad rows carry no probability mass into the top-p
+    cumulative either).  Returns (B,) int32.
+
+    Per-row semantics, composing the standard filters:
+
+      * ``temperature <= 0`` or ``top_k == 1`` — greedy: plain
+        ``argmax(logits)``, bitwise-identical to the historical greedy
+        serve loop (no RNG consumed from the result; the key is unused;
+        the vocab bound is NOT applied — greedy compatibility is exact).
+      * ``top_k > 0``   — keep only the k highest-scoring tokens.
+      * ``top_p < 1``   — nucleus: keep the SMALLEST descending-sorted
+        prefix whose probability mass reaches ``top_p`` (a token is kept
+        iff the mass strictly before it is < top_p; the top-1 token is
+        always kept).
+      * ``min_p > 0``   — keep tokens whose probability is at least
+        ``min_p`` times the maximum token probability.
+
+    Survivors are sampled via the Gumbel-argmax trick on the
+    temperature-scaled logits: argmax(logits/T + G), G ~ Gumbel(0, 1)
+    drawn per (row, token) from the row's key.  The draw happens in
+    descending-sorted space (one argsort total; the winner's RANK maps
+    back through the sort permutation) — same distribution, and for a
+    fixed key the result is bitwise-deterministic — the property the
+    streamed serve loop relies on for seg_len-invariant replay."""
+    b, v = logits.shape
+    lf = logits.astype(jnp.float32)
+    temperature = jnp.asarray(temperature, jnp.float32).reshape(b)
+    top_k = jnp.asarray(top_k, jnp.int32).reshape(b)
+    top_p = jnp.asarray(top_p, jnp.float32).reshape(b)
+    min_p = jnp.asarray(min_p, jnp.float32).reshape(b)
+
+    greedy = (temperature <= 0.0) | (top_k == 1)
+    scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
+    if vocab and vocab < v:
+        scaled = jnp.where(jnp.arange(v)[None, :] < vocab, scaled, -jnp.inf)
+
+    # Filters are computed in descending-sorted space (stable argsort —
+    # ties broken by token id, deterministically).
+    order = jnp.argsort(-scaled, axis=-1)                     # (B,V)
+    sorted_logits = jnp.take_along_axis(scaled, order, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    ranks = jnp.arange(v)[None, :]
+    keep = jnp.ones((b, v), bool)
+    keep &= jnp.where(top_k[:, None] > 0, ranks < top_k[:, None], True)
+    cum_before = jnp.cumsum(probs, axis=-1) - probs           # mass before i
+    keep &= (cum_before < top_p[:, None]) | (ranks == 0)
+    keep &= probs >= min_p[:, None] * probs[:, :1]
+    filtered = jnp.where(keep, sorted_logits, -jnp.inf)
+
+    gumbel = jax.vmap(
+        lambda k: jax.random.gumbel(k, (v,), jnp.float32))(keys)
+    rank = jnp.argmax(filtered + gumbel, axis=-1)             # winning RANK
+    sampled = jnp.take_along_axis(order, rank[:, None], axis=-1)[:, 0]
+    return jnp.where(greedy, jnp.argmax(lf, axis=-1),
+                     sampled).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
 # KNN distances (VectorDB offload target)
 # --------------------------------------------------------------------------
 

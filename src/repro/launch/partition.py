@@ -143,6 +143,12 @@ def cache_specs(abstract_cache: Dict[str, Any], cfg: ArchConfig,
             out[k] = P()
             continue
         shape = v.shape
+        if len(shape) == 1:
+            # per-slot (B,) clocks (enc_pos): batch-sharded like the rows
+            # they describe, replicated when the batch doesn't divide
+            out[k] = P(b_axes if _divisible(shape[0], mesh, b_axes)
+                       else None)
+            continue
         batch_ax = b_axes if _divisible(shape[1], mesh, b_axes) else None
         if k.startswith(("k", "v")) and not k.startswith("conv"):
             seq_ax = tp if (tp and _divisible(shape[3], mesh, tp)) else None

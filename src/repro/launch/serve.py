@@ -27,8 +27,18 @@ Two host loops over the same jitted steps:
                             (double buffering via overlapped device_get),
                             so the host syncs once per segment instead of
                             once per token.  Next-segment inputs chain
-                            device-side (last tokens / positions never
-                            round-trip through the host).
+                            device-side (last tokens / positions / PRNG
+                            keys / alive masks never round-trip through
+                            the host).
+
+Decoding is per-slot stochastic sampling (DESIGN.md §6): each `Request`
+carries a `SamplingParams` (temperature / top_k / top_p / min_p / seed /
+stop tokens), realized device-side as a `steps.SlotState` — per-slot PRNG
+chains split once per decode step inside the jitted segments, and
+in-segment termination masks (stop token hit, token budget exhausted)
+that freeze a finished row until the host retires it at a segment
+boundary.  The default (no `sampling` on the request) is greedy argmax,
+bitwise-identical to the historical loop.
 
 Prompt admission runs a real prefill for EVERY registered architecture —
 no degradation path.  Attention layers push the full prompt through the
@@ -46,7 +56,7 @@ import argparse
 import dataclasses
 import sys
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +66,7 @@ from repro import sharding as sh
 from repro.configs import get_config, get_smoke_config
 from repro.core.backstream import (OffloadConfig, OffloadProtocol,
                                    use_offload)
+from repro.kernels import ops
 from repro.launch import steps as steps_lib
 from repro.models import transformer
 from repro.models.registry import get_model
@@ -64,25 +75,67 @@ PROTOCOLS = {"bs": OffloadProtocol.BS, "axle": OffloadProtocol.AXLE,
              "rp": OffloadProtocol.RP}
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding control state (the AXLE point: async device
+    segments must carry per-request CONTROL, not just data).
+
+    temperature — 0 (default) decodes greedily (bitwise-identical to the
+                  historical argmax loop, no RNG consumed); > 0 samples
+                  from the temperature-scaled distribution.
+    top_k       — keep only the k highest-probability tokens (0 = off;
+                  1 ≡ greedy).
+    top_p       — nucleus sampling: keep the smallest top-probability set
+                  with mass >= top_p (1.0 = off).
+    min_p       — drop tokens below min_p × the max token probability
+                  (0.0 = off).
+    seed        — per-request PRNG seed.  Token k of a request is always
+                  sampled with the k-th split of this seed's key chain:
+                  reproducible across seg_len choices, slot assignments,
+                  batch-mates, and per-token vs streamed loops.
+    stop_tokens — token ids that terminate the request (EOS and friends;
+                  at most steps.MAX_STOP_TOKENS of them).  The stop token
+                  itself is delivered as the last generated token.
+    max_new     — optional per-request budget override of Request.max_new.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    min_p: float = 0.0
+    seed: int = 0
+    stop_tokens: Tuple[int, ...] = ()
+    max_new: Optional[int] = None
+
+
+GREEDY = SamplingParams()
+
+
 @dataclasses.dataclass
 class Request:
     """One serving request.
 
     prompt    — (prompt_len,) int32 token ids; for encoder-decoder archs
                 these are the DECODER prompt (task/language tokens).
-    max_new   — tokens to generate; the first is produced by the prefill
-                itself (greedy over the last prompt position's logits).
-    embeds    — encoder-decoder only: (enc_len, d_model) frame embeddings
-                from the (stubbed) audio frontend.  Must span the cache's
-                full enc_len; None falls back to silence (zeros).
-    generated — filled by the server: the `max_new` greedy tokens, in
-                order.  Identical across per-token/streamed loops and
-                independent of which slot or batch the request shared
-                (per-row position clocks)."""
+    max_new   — token budget; the first token is produced by the prefill
+                itself (sampled, like every later one, from the request's
+                chain — greedy when `sampling` is unset).
+    embeds    — encoder-decoder only: (e, d_model) frame embeddings from
+                the (stubbed) audio frontend, e <= cfg.enc_len.  Clips
+                SHORTER than enc_len are first-class: the slot's cross
+                cache rows past e are masked by the per-slot enc_pos
+                clock.  None falls back to enc_len of silence (zeros).
+    sampling  — per-request SamplingParams; None decodes greedily with no
+                stop tokens (the historical contract: exactly `max_new`
+                tokens, bitwise-identical across loop modes).
+    generated — filled by the server: the generated tokens in order
+                (<= max_new of them; ends with a stop token iff one was
+                hit).  Independent of which slot or batch the request
+                shared (per-row position clocks, per-slot PRNG chains)."""
     rid: int
     prompt: np.ndarray            # (prompt_len,) int32
     max_new: int
     embeds: Optional[np.ndarray] = None
+    sampling: Optional[SamplingParams] = None
     generated: Optional[List[int]] = None
 
 
@@ -124,15 +177,29 @@ class BatchedServer:
     jitted prefill traces once per bucket; junk past the true length is
     harmless by construction (see transformer.prefill_into_cache).
 
+    Decoding control state lives DEVICE-side in a `steps.SlotState`: the
+    per-slot PRNG chains, sampling parameters, stop sets, budgets and
+    alive masks ride the jitted segments, so stochastic per-request
+    decoding keeps the ~1-sync-per-segment property.  Termination
+    accounting (DESIGN.md §6):
+
+      * rows WITHOUT stop tokens terminate only by budget — a count the
+        host knows at dispatch, so they retire at dispatch time exactly
+        as in the greedy-only loop (same pipeline depth, same syncs);
+      * rows WITH stop tokens terminate stochastically — the device's
+        in-segment alive mask is authoritative, the host learns of the
+        death one overlapped device_get later and retires the row at
+        that segment boundary (the slot refills one segment later than
+        a dispatch-time oracle could — the price of not syncing
+        mid-segment).
+
     Two drive modes (`run_until_drained` dispatches on `stream`):
-      per-token — `step()`: one jitted decode step + one host sync per
+      per-token — `step()`: a seg_len-1 segment + one host sync per
                   token; the bulk-synchronous baseline.
       streamed  — `run_stream()`: jitted `seg_len`-token segments with
                   double-buffered device_get; ~1 host sync per seg_len
-                  tokens, dispatch-time slot accounting (greedy decode
-                  is deterministic, so a segment's token usage is known
-                  when it is dispatched).  Both modes emit identical
-                  tokens.
+                  tokens.  Both modes emit identical tokens (the PRNG
+                  chain is per-slot per-step, not per-dispatch).
     """
 
     def __init__(self, arch_id: str, *, smoke: bool = True,
@@ -153,11 +220,28 @@ class BatchedServer:
         self.params = self.model.init_params(self.cfg, jax.random.key(0))
         self.cache = self.model.init_cache(self.cfg, batch_slots, max_seq)
         # cache donation: in-place ring-slot updates (§Perf iteration D3)
-        self.step_fn = jax.jit(steps_lib.make_serve_step(self.cfg),
-                               donate_argnums=(1,))
+        # per-token mode is a seg_len-1 segment through the SAME sampling
+        # machinery, so both loop modes share one PRNG chain / stop
+        # semantics and emit identical tokens.  Each mode has a `plain`
+        # greedy fast-path twin (no sort/Gumbel epilogue, no write-mask
+        # selects) picked at dispatch when no active row samples or has
+        # stops — the pre-sampling hot path at pre-sampling cost; jit is
+        # lazy, so a variant never dispatched is never compiled.
+        self.step_fn = jax.jit(
+            steps_lib.make_decode_segment(self.cfg, 1),
+            donate_argnums=(1,))
+        self.step_plain_fn = jax.jit(
+            steps_lib.make_decode_segment(self.cfg, 1, plain=True),
+            donate_argnums=(1,))
         self.segment_fn = jax.jit(
             steps_lib.make_decode_segment(self.cfg, seg_len),
             donate_argnums=(1,))
+        self.segment_plain_fn = jax.jit(
+            steps_lib.make_decode_segment(self.cfg, seg_len, plain=True),
+            donate_argnums=(1,))
+        # device-side per-slot decode state (tokens, positions, PRNG
+        # chains, budgets, alive masks, sampling params, stop sets)
+        self.state = steps_lib.init_slot_state(batch_slots)
         # every registered config has a real prefill path (attention,
         # SSM/hybrid state capture, enc-dec) — admission never degrades
         # to last-token seeding.
@@ -168,7 +252,9 @@ class BatchedServer:
             donate_argnums=(1,))
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * batch_slots
-        self.tokens = np.zeros((batch_slots, 1), np.int32)
+        # host mirrors of the device SlotState, for dispatch-time budget
+        # accounting (`remaining`) and the per-row clock asserts
+        # (`positions`); the token chain itself lives only on device
         self.positions = np.zeros((batch_slots,), np.int32)
         self.remaining = np.zeros((batch_slots,), np.int32)
         self.completed: List[Request] = []
@@ -187,13 +273,14 @@ class BatchedServer:
     def _ctx(self):
         return self.rules.mesh if self.rules is not None else _null()
 
-    def _prefill(self, slot: int, req: Request) -> int:
+    def _prefill(self, slot: int, req: Request) -> jax.Array:
         """Real prefill: the whole prompt through the jitted prefill step
         — per-layer K/V and/or recurrent (conv, ssm) states written into
         this slot's cache rows; enc-dec archs additionally run the
-        encoder on the request's frames and fill the slot's cross-KV.
-        Returns the first generated token (greedy over the last prompt
-        position's logits)."""
+        encoder on the request's frames (at their TRUE length e <=
+        enc_len — shorter clips retrace once per distinct length and set
+        the slot's enc_pos clock) and fill the slot's cross-KV.  Returns
+        the last prompt position's logits (a device array — no sync)."""
         plen = len(req.prompt)
         assert plen <= self.max_seq, (plen, self.max_seq)
         padded = np.zeros((_prefill_bucket(plen, self.max_seq),), np.int32)
@@ -204,64 +291,114 @@ class BatchedServer:
             if emb is None:       # silence: the stub frontend's zero frames
                 emb = np.zeros((self.cfg.enc_len, self.cfg.d_model),
                                np.float32)
-            assert emb.shape == (self.cfg.enc_len, self.cfg.d_model), \
-                emb.shape
+            e, d = emb.shape
+            assert e <= self.cfg.enc_len and d == self.cfg.d_model, emb.shape
             args = (jnp.asarray(emb)[None],)
         with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
             logits, self.cache = self.prefill_fn(
                 self.params, self.cache, jnp.asarray(padded), slot, plen,
                 *args)
-        self.host_syncs += 1
-        return int(jnp.argmax(logits))
+        return logits
 
-    def _fill_slots(self) -> List[int]:
-        """Admit queued requests into free slots via real prefill; returns
-        the slots that were (re)seeded this call."""
-        seeded: List[int] = []
+    def _admit(self, slot: int, req: Request) -> bool:
+        """Prefill + first-token sampling + device state seeding for one
+        request.  The first token is sampled with split #0 of the
+        request's seed key and every later token with splits #1, #2, …
+        inside the jitted segments — one chain, independent of loop mode
+        and segmentation.  Returns False if the request finished on its
+        first token (budget of 1, or an immediate stop hit)."""
+        sp = req.sampling or GREEDY
+        assert len(sp.stop_tokens) <= steps_lib.MAX_STOP_TOKENS, sp
+        max_new = sp.max_new if sp.max_new is not None else req.max_new
+        logits = self._prefill(slot, req)
+        key, sub = jax.random.split(jax.random.PRNGKey(sp.seed))
+        samp1 = ops.BatchedSampling(
+            temperature=jnp.full((1,), sp.temperature, jnp.float32),
+            top_k=jnp.full((1,), sp.top_k, jnp.int32),
+            top_p=jnp.full((1,), sp.top_p, jnp.float32),
+            min_p=jnp.full((1,), sp.min_p, jnp.float32))
+        first = int(ops.sample_tokens(logits[None], samp1, sub[None],
+                                      vocab=self.cfg.vocab)[0])
+        self.host_syncs += 1           # the admission sync (was: argmax)
+        req.generated.append(first)
+        self.tokens_emitted += 1
+        remaining = max_new - 1
+        if remaining <= 0 or first in sp.stop_tokens:
+            return False
+        # the first generated token sits at position len(prompt)
+        self.positions[slot] = len(req.prompt)
+        self.remaining[slot] = remaining
+        stop = np.full((steps_lib.MAX_STOP_TOKENS,), -1, np.int32)
+        stop[:len(sp.stop_tokens)] = sp.stop_tokens
+        self.state = steps_lib.admit_slot(
+            self.state, slot, token=first, position=len(req.prompt),
+            key=key, remaining=remaining, temperature=sp.temperature,
+            top_k=sp.top_k, top_p=sp.top_p, min_p=sp.min_p,
+            stop=jnp.asarray(stop))
+        return True
+
+    def _fill_slots(self) -> None:
+        """Admit queued requests into free slots via real prefill; all
+        device-state seeding happens inside `_admit` (steps.admit_slot)."""
         for s in range(self.batch):
             if self.active[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[s] = req
-                first = self._prefill(s, req)
-                req.generated.append(first)
-                self.tokens_emitted += 1
-                self.tokens[s, 0] = first
-                # the first generated token sits at position len(prompt)
-                self.positions[s] = len(req.prompt)
-                self.remaining[s] = req.max_new - 1
-                if self.remaining[s] <= 0:
+                if not self._admit(s, req):
                     self.completed.append(req)
                     self.active[s] = None
-                    continue
-                seeded.append(s)
-        return seeded
 
-    # -- per-token loop (bulk-synchronous baseline) ------------------------
+    def _dispatch_rows(self, seg_len: int):
+        """Slot accounting at dispatch time, where it is still possible:
+        a row with NO stop tokens terminates only by budget, so its token
+        usage for the next segment is known now — it retires immediately
+        and its slot refills while the segment is still in flight (the
+        PR-1 pipeline).  A row WITH stop tokens is `(req, None)`: the
+        device's alive mask decides, and `_consume_segment` retires it
+        one overlapped device_get later.
 
-    def step(self) -> None:
-        self._fill_slots()
-        if all(r is None for r in self.active):
-            return
-        with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
-            nxt, _, self.cache = self.step_fn(
-                self.params, self.cache, jnp.asarray(self.tokens),
-                jnp.asarray(self.positions))
-        nxt = np.asarray(nxt)
-        self.host_syncs += 1
-        self.decode_syncs += 1
-        self.steps += 1
-        self.positions += 1
+        Returns (rows, plain): `plain` is True when every dispatched row
+        is greedy with no stop set — the segment can take the fast-path
+        variant (no sampling epilogue).  The variants interleave freely
+        because greedy rows never READ their keys and sampling params are
+        fixed at admission (see make_decode_segment's key-state note)."""
+        rows: Dict[int, Any] = {}
+        plain = True
         for s in range(self.batch):
             req = self.active[s]
             if req is None:
                 continue
-            req.generated.append(int(nxt[s, 0]))
-            self.tokens_emitted += 1
-            self.tokens[s, 0] = nxt[s, 0]
-            self.remaining[s] -= 1
+            sp = req.sampling or GREEDY
+            if not (sp.temperature <= 0 or sp.top_k == 1):
+                plain = False
+            if sp.stop_tokens:
+                plain = False
+                rows[s] = (req, None)
+                continue
+            take = int(min(seg_len, self.remaining[s]))
+            self.remaining[s] -= take
+            rows[s] = (req, take)
             if self.remaining[s] <= 0:
                 self.completed.append(req)
                 self.active[s] = None
+        return rows, plain
+
+    # -- per-token loop (bulk-synchronous baseline) ------------------------
+
+    def step(self) -> None:
+        """One token for every active slot: a seg_len-1 segment through
+        the same sampling machinery as the streamed loop, consumed
+        synchronously — one dispatch + one host sync per token."""
+        self._fill_slots()
+        if all(r is None for r in self.active):
+            return
+        rows, plain = self._dispatch_rows(1)
+        fn = self.step_plain_fn if plain else self.step_fn
+        with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
+            seg, emit, self.state, self.cache = fn(
+                self.params, self.cache, self.state)
+        self.steps += 1
+        self._consume_segment(seg, emit, self.state, rows)
 
     # -- streamed loop (producer-initiated token stream) -------------------
 
@@ -271,43 +408,26 @@ class BatchedServer:
         tokens are copied out, so the device_get overlaps device compute
         and the host syncs once per segment (<= 1 sync / seg_len tokens).
 
-        Slot accounting happens at dispatch time (greedy decode is
-        deterministic, so how many of a segment's tokens a request will
-        take is known when it is dispatched); tokens are delivered to
-        `Request.generated` one segment later."""
-        tok_dev = jnp.asarray(self.tokens)
-        pos_dev = jnp.asarray(self.positions, jnp.int32)
-        pending = None                       # (segment tokens, rows taken)
+        Tokens are delivered to `Request.generated` one segment later,
+        together with the per-row emit masks and alive bits that carry
+        the device-side termination verdicts (stop tokens / budgets) back
+        to the host — see `_dispatch_rows` for which of the two
+        accounting regimes each row is under."""
+        pending = None           # (segment, emit masks, state, rows)
         while True:
-            for s in self._fill_slots():
-                tok_dev = tok_dev.at[s, 0].set(int(self.tokens[s, 0]))
-                pos_dev = pos_dev.at[s].set(int(self.positions[s]))
+            self._fill_slots()
             nxt_pending = None
             if self.steps < max_steps \
                     and any(r is not None for r in self.active):
-                rows: Dict[int, Any] = {}
-                for s in range(self.batch):
-                    req = self.active[s]
-                    if req is None:
-                        continue
-                    take = int(min(self.seg_len, self.remaining[s]))
-                    rows[s] = (req, take)
-                    self.remaining[s] -= take
-                    if self.remaining[s] <= 0:
-                        # retire at dispatch: the refill's prefill is
-                        # sequenced after this segment on device, so the
-                        # slot can be reused next iteration while tokens
-                        # are still in flight to the host.
-                        self.completed.append(req)
-                        self.active[s] = None
+                rows, plain = self._dispatch_rows(self.seg_len)
+                fn = self.segment_plain_fn if plain else self.segment_fn
                 with self._ctx(), sh.use_rules(self.rules), \
                         use_offload(self.offload):
-                    seg, tok_dev, pos_dev, self.cache = self.segment_fn(
-                        self.params, self.cache, tok_dev, pos_dev)
+                    seg, emit, self.state, self.cache = fn(
+                        self.params, self.cache, self.state)
                 self.steps += self.seg_len
                 self.segments_dispatched += 1
-                self.positions += self.seg_len
-                nxt_pending = (seg, rows)
+                nxt_pending = (seg, emit, self.state, rows)
             if pending is not None:
                 # ONE host sync per segment; overlaps the segment just
                 # dispatched above.
@@ -320,14 +440,35 @@ class BatchedServer:
             if not self.queue and all(r is None for r in self.active):
                 return
 
-    def _consume_segment(self, seg, rows) -> None:
-        arr = np.asarray(jax.device_get(seg))
+    def _consume_segment(self, seg, emit, state, rows) -> None:
+        """Deliver one segment's tokens and apply the device's termination
+        verdicts.  `state` is the SlotState returned BY that segment (a
+        later admission's .at[] writes produce new arrays, so this
+        snapshot is stable even with a newer segment already in flight)."""
+        arr, em, alive, rem, pos = jax.device_get(
+            (seg, emit, state.alive, state.remaining, state.positions))
         self.host_syncs += 1
         self.decode_syncs += 1
         for s, (req, take) in rows.items():
-            for t in arr[s, :take]:
+            toks = arr[s][em[s].astype(bool)]
+            for t in toks:
                 req.generated.append(int(t))
-            self.tokens_emitted += take
+            self.tokens_emitted += len(toks)
+            if take is not None:
+                # device budget accounting must agree with the host's
+                # dispatch-time prediction for stop-free rows
+                assert len(toks) == take, (s, len(toks), take)
+            if self.active[s] is req:
+                # per-row position clock: advances by exactly one per
+                # emitted token, never for frozen rows
+                assert pos[s] == self.positions[s] + len(toks), \
+                    (s, pos[s], self.positions[s], len(toks))
+                self.positions[s] = int(pos[s])
+                if take is None:
+                    self.remaining[s] = int(rem[s])
+                    if not alive[s]:
+                        self.completed.append(req)
+                        self.active[s] = None
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         if self.stream:
@@ -356,12 +497,29 @@ def main() -> int:
     ap.add_argument("--stream", action="store_true",
                     help="producer-initiated segment streaming loop")
     ap.add_argument("--seg-len", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (default); > 0 samples per slot")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed (request i uses seed + i)")
+    ap.add_argument("--stop-eos", action="store_true",
+                    help="stop each request at the config's eos_token")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
     server = BatchedServer(args.arch, smoke=True, batch_slots=args.slots,
                            protocol=args.protocol, stream=args.stream,
                            seg_len=args.seg_len)
+    stops = (server.cfg.eos_token,) if args.stop_eos else ()
+    sampled = (args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0
+               or args.stop_eos)
+    if args.temperature <= 0 and (args.top_k > 1 or args.top_p < 1.0):
+        # a filter without a temperature would silently decode greedily
+        # (temperature 0 marks the row greedy and ignores top-k/top-p)
+        print("[serve] --top-k/--top-p given without --temperature: "
+              "defaulting temperature to 1.0", file=sys.stderr)
+        args.temperature = 1.0
     t0 = time.time()
     for i in range(args.requests):
         plen = int(rng.integers(4, 12))
@@ -369,15 +527,20 @@ def main() -> int:
         if server.cfg.enc_dec:    # stub audio frontend: random frames
             embeds = rng.standard_normal(
                 (server.cfg.enc_len, server.cfg.d_model)).astype(np.float32)
+        sampling = SamplingParams(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, seed=args.seed + i,
+            stop_tokens=stops) if sampled else None
         server.submit(Request(i, rng.integers(
             1, server.cfg.vocab, plen).astype(np.int32), args.max_new,
-            embeds=embeds))
+            embeds=embeds, sampling=sampling))
     server.run_until_drained()
     dt = time.time() - t0
     toks = sum(len(r.generated) for r in server.completed)
     mode = "stream" if args.stream else "per-token"
     spt = server.decode_syncs / max(1, toks)
     print(f"[serve] protocol={args.protocol} mode={mode} "
+          f"sampling={'on' if sampled else 'greedy'} "
           f"requests={len(server.completed)} tokens={toks} "
           f"steps={server.steps} syncs/token={spt:.3f} "
           f"({toks / dt:.1f} tok/s on CPU)")

@@ -2,16 +2,89 @@
 training driver, and the serving driver."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.models.config import ArchConfig
 from repro.models.registry import get_model
 from repro.optim import adamw
 from repro.optim import compression
+
+# stop-token slots per serving request (padded with -1); a static width so
+# the SlotState pytree never retraces on admission
+MAX_STOP_TOKENS = 4
+
+
+class SlotState(NamedTuple):
+    """Device-resident per-slot decode state of the streamed serve loop —
+    everything a `seg_len`-token segment needs to run WITHOUT a host
+    round trip, including the stochastic-sampling control state that
+    arXiv 2309.04011 argues must ride the async submission path alongside
+    the data.
+
+    tokens/positions are the PR-1 carries (current token + per-row
+    position clock).  New in the sampling subsystem (DESIGN.md §6):
+
+      keys      — (B, 2) uint32 per-slot PRNG chains.  Each scan step
+                  splits every row's key once (consume-on-emit), so token
+                  k of a request is always sampled with the k-th split of
+                  its seed key: bitwise-reproducible across seg_len
+                  segmentations, slots, and per-token vs streamed loops.
+      remaining — (B,) i32 token budget left (max_new accounting).
+      alive     — (B,) bool: row emits this step.  Cleared DEVICE-SIDE
+                  when a sampled token hits the row's stop set or the
+                  budget runs out; dead rows freeze (token, position,
+                  cache writes masked) until the host retires them at a
+                  segment boundary.
+      sampling  — per-slot temperature/top_k/top_p/min_p
+                  (ops.BatchedSampling).
+      stop      — (B, MAX_STOP_TOKENS) i32 stop-token ids, -1-padded
+                  (-1 never matches a sampled token, which is >= 0).
+    """
+    tokens: jax.Array             # (B, 1) i32
+    positions: jax.Array          # (B,) i32
+    keys: jax.Array               # (B, 2) u32
+    remaining: jax.Array          # (B,) i32
+    alive: jax.Array              # (B,) bool
+    sampling: ops.BatchedSampling
+    stop: jax.Array               # (B, MAX_STOP_TOKENS) i32
+
+
+def init_slot_state(batch: int) -> SlotState:
+    """All-slots-idle state: nothing alive, greedy parameters, no stops."""
+    return SlotState(
+        tokens=jnp.zeros((batch, 1), jnp.int32),
+        positions=jnp.zeros((batch,), jnp.int32),
+        keys=jnp.zeros((batch, 2), jnp.uint32),
+        remaining=jnp.zeros((batch,), jnp.int32),
+        alive=jnp.zeros((batch,), bool),
+        sampling=ops.greedy_sampling(batch),
+        stop=jnp.full((batch, MAX_STOP_TOKENS), -1, jnp.int32))
+
+
+def admit_slot(state: SlotState, slot: int, *, token: int, position: int,
+               key: jax.Array, remaining: int, temperature: float,
+               top_k: int, top_p: float, min_p: float,
+               stop: jax.Array) -> SlotState:
+    """Seed one slot's device state at admission (a handful of token-sized
+    .at[] updates — dispatched asynchronously, sequenced after any
+    in-flight segment by data dependence on the state arrays)."""
+    s = state
+    return SlotState(
+        tokens=s.tokens.at[slot, 0].set(token),
+        positions=s.positions.at[slot].set(position),
+        keys=s.keys.at[slot].set(key),
+        remaining=s.remaining.at[slot].set(remaining),
+        alive=s.alive.at[slot].set(remaining > 0),
+        sampling=ops.BatchedSampling(
+            temperature=s.sampling.temperature.at[slot].set(temperature),
+            top_k=s.sampling.top_k.at[slot].set(top_k),
+            top_p=s.sampling.top_p.at[slot].set(top_p),
+            min_p=s.sampling.min_p.at[slot].set(min_p)),
+        stop=s.stop.at[slot].set(stop))
 
 
 def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, *,
@@ -62,31 +135,81 @@ def make_serve_step(cfg: ArchConfig, *, greedy: bool = True):
     return serve_step
 
 
-def make_decode_segment(cfg: ArchConfig, seg_len: int):
-    """(params, cache, tokens (B,1), positions (B,)) ->
-       (segment (B, seg_len), last_tokens (B,1), positions (B,), cache).
+def make_decode_segment(cfg: ArchConfig, seg_len: int, *,
+                        plain: bool = False):
+    """(params, cache, state: SlotState) ->
+       (segment (B, seg_len), emitted (B, seg_len) bool, state, cache).
 
-    A jitted multi-token decode segment: `seg_len` greedy decode steps
+    A jitted multi-token decode segment: `seg_len` decode+sample steps
     rolled into one lax.scan, so the host dispatches (and syncs on) ONE
     device computation per `seg_len` tokens instead of one per token —
     the producer-initiated token stream of the serving loop.  The cache
     threads through the scan carry (donate it at the jit boundary for
-    in-place ring-slot updates); per-row positions advance on-device so
-    the stream needs no host round trip between steps."""
+    in-place ring-slot updates).
+
+    Everything that used to require host-side greedy accounting now rides
+    the SlotState carry device-side (DESIGN.md §6):
+
+      * per-slot PRNG chains split once per step — token k of a request
+        is sampled with the k-th split of its seed key, independent of
+        seg_len, slot, and what other slots are doing;
+      * in-segment termination: a sampled stop token or an exhausted
+        budget clears the row's alive bit; from the next step the row is
+        FROZEN — token and position stop advancing, `write_mask=alive`
+        keeps its cache slots untouched — until the host retires it at a
+        segment boundary;
+      * `emitted[b, t]` records whether row b produced a real token at
+        step t (its alive bit at entry), which is all the host needs to
+        deliver tokens and retire rows one overlapped device_get later.
+
+    Greedy rows (temperature 0 / top_k 1) take the argmax path inside
+    `ops.sample_tokens`, bitwise-identical to the pre-sampling loop.
+
+    `plain=True` builds the greedy fast-path variant the server selects
+    when EVERY active row is greedy with no stop set (the default
+    workload): plain argmax, no key splits, no sort/Gumbel epilogue, no
+    write-mask gather+selects (dead rows keep rewriting their slot, as
+    the pre-sampling loop did — harmless, re-prefill overwrites it).
+    The budget/alive/emit accounting is identical and alive rows' tokens
+    are bitwise those of the sampled variant, so the two variants
+    interleave freely mid-stream as the workload mix changes.  NOTE the
+    key-state caveat: the sampled variant splits EVERY row's key each
+    step while plain splits none, so a row's key state depends on which
+    variant mix ran — safe only because greedy rows never READ their
+    keys, and a row's sampling params are fixed at admission (a request
+    cannot flip greedy→stochastic mid-stream)."""
     model = get_model(cfg)
 
-    def segment(params, cache, tokens, positions):
+    def segment(params, cache, state: SlotState):
         def body(carry, _):
-            toks, cache, pos = carry
-            logits, cache = model.decode_step(cfg, params, cache, toks,
-                                              positions=pos)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-            return (nxt, cache, pos + 1), nxt[:, 0]
+            toks, cache, pos, keys, remaining, alive = carry
+            logits, cache = model.decode_step(
+                cfg, params, cache, toks, positions=pos,
+                write_mask=None if plain else alive)
+            if plain:
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                hit_stop = jnp.zeros_like(alive)
+            else:
+                both = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+                keys, sub = both[:, 0], both[:, 1]
+                nxt = ops.sample_tokens(logits[:, -1], state.sampling, sub,
+                                        vocab=cfg.vocab)
+                nxt = jnp.where(alive, nxt, toks[:, 0])  # dead rows freeze
+                hit_stop = jnp.any(nxt[:, None] == state.stop, axis=-1)
+            emitted = alive
+            remaining = remaining - emitted.astype(jnp.int32)
+            alive = alive & (remaining > 0) & ~hit_stop
+            pos = pos + emitted.astype(jnp.int32)
+            return (nxt[:, None], cache, pos, keys, remaining, alive), \
+                (nxt, emitted)
 
-        (last, cache, pos), seq = jax.lax.scan(
-            body, (tokens, cache, jnp.asarray(positions, jnp.int32)),
-            length=seg_len)
-        return seq.T, last, pos, cache        # seq.T: (B, seg_len)
+        carry = (state.tokens, cache, state.positions, state.keys,
+                 state.remaining, state.alive)
+        (toks, cache, pos, keys, remaining, alive), (seq, emit) = \
+            jax.lax.scan(body, carry, length=seg_len)
+        state = state._replace(tokens=toks, positions=pos, keys=keys,
+                               remaining=remaining, alive=alive)
+        return seq.T, emit.T, state, cache    # seq.T/emit.T: (B, seg_len)
 
     return segment
 

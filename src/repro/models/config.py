@@ -44,6 +44,12 @@ class ArchConfig:
     ssm_expand: int = 2            # d_inner = expand * d_model
     conv_width: int = 4
 
+    # --- serving ----------------------------------------------------------------
+    # end-of-sequence token id: the default stop token serving callers put
+    # in SamplingParams.stop_tokens (the registry-level fact the serve
+    # loop's per-request stop sets are seeded from)
+    eos_token: int = 0
+
     # --- structure -------------------------------------------------------------
     enc_dec: bool = False          # whisper: encoder-decoder
     n_enc_layers: int = 0

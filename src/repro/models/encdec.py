@@ -157,13 +157,21 @@ def logits_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
 
 def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
                enc_len: int = 0) -> Dict[str, Any]:
-    """Self-attention KV cache + precomputed per-layer cross KV."""
+    """Self-attention KV cache + precomputed per-layer cross KV.
+
+    `enc_pos` is the per-slot ENCODER length clock: cross-attention at
+    decode time attends only to cross-KV rows < enc_pos[b], so a slot
+    serving a clip shorter than the cache's enc_len never reads the
+    zero-padded (or stale) tail.  It defaults to the full enc_len, which
+    keeps the whole-batch `prefill_cross_cache` path and existing decode
+    callers at the historical all-rows-valid behavior."""
     cache = T.init_cache(cfg, batch_size, max_seq)
     dt = jnp.dtype(cfg.dtype)
     kh, hd = cfg.n_kv_heads, cfg.head_dim_
     enc_len = enc_len or cfg.enc_len
     cache["cross_k"] = jnp.zeros((cfg.n_blocks, batch_size, kh, enc_len, hd), dt)
     cache["cross_v"] = jnp.zeros((cfg.n_blocks, batch_size, kh, enc_len, hd), dt)
+    cache["enc_pos"] = jnp.full((batch_size,), enc_len, jnp.int32)
     return cache
 
 
@@ -188,10 +196,13 @@ def _cross_kv(cfg: ArchConfig, cross_p: Params, enc_out: jax.Array
 
 def prefill_cross_cache(cfg: ArchConfig, params: Params, enc_out: jax.Array,
                         cache: Dict[str, Any]) -> Dict[str, Any]:
-    """Compute cross-attention K/V for every decoder layer from enc_out."""
+    """Compute cross-attention K/V for every decoder layer from enc_out
+    (whole-batch path: every row gets the same encoder output and the
+    full encoder length)."""
     ks, vs = jax.vmap(lambda cp: _cross_kv(cfg, cp, enc_out))(params["cross"])
     out = dict(cache)
     out["cross_k"], out["cross_v"] = ks, vs
+    out["enc_pos"] = jnp.full_like(cache["enc_pos"], enc_out.shape[1])
     return out
 
 
@@ -207,15 +218,25 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
     (transformer.prefill_into_cache) plus the encoder side:
 
       1. encoder pass over the request's frame embeddings
-         (enc_embeds: (1, enc_len, D) — the stub audio frontend's output);
+         (enc_embeds: (1, e, D) with e <= the cache's enc_len — the stub
+         audio frontend's output at the clip's TRUE frame count; a clip
+         shorter than cfg.enc_len no longer needs frontend-side padding);
       2. per-layer cross-attention K/V projected from the encoder output
          and written into this slot's rows of cache['cross_k'/'cross_v']
          (previously a whole-batch precompute, incompatible with
-         continuous batching where every slot serves a different request);
+         continuous batching where every slot serves a different request).
+         Rows past e are zeroed and `cache['enc_pos'][row]` is set to e,
+         so decode cross-attention masks them out (the zeroing is belt
+         and braces against the previous occupant's trailing frames; the
+         enc_pos clock is what correctness rests on);
       3. decoder self-attention prefill: the whole (padded) decoder
          prompt through the flash_attention kernel, per-layer K/V written
          into the slot's cache rows.  Junk past `length` lands at slots
          >= length, invisible under the per-row position clock.
+
+    The encoder length e is a static shape: a jitted caller retraces once
+    per distinct clip length (the serving driver passes clips at their
+    true length; bucket upstream if trace churn matters).
 
     Returns (last-token logits (V,), updated cache)."""
     from repro.kernels import ops
@@ -255,22 +276,32 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
     for key, val in states.items():                         # (L,1,KH,*,hd)
         c = out_cache[key]
         if key.startswith("cross"):
-            # decode attends over the FULL cross cache row — a partial
-            # write would leak the previous occupant's trailing frames
-            assert e == c.shape[3], (e, c.shape)
+            # write the FULL cross row: real K/V for the clip's e frames,
+            # zeros beyond — decode masks rows >= enc_pos[row] anyway
+            assert e <= c.shape[3], (e, c.shape)
+            val = jnp.pad(val, ((0, 0), (0, 0), (0, 0),
+                                (0, c.shape[3] - e), (0, 0)))
         else:
             assert p_len <= c.shape[3], (p_len, c.shape)
         out_cache[key] = lax.dynamic_update_slice(
             c, val.astype(c.dtype), (0, row, 0, 0, 0))
+    out_cache["enc_pos"] = cache["enc_pos"].at[row].set(e)
     return logits, out_cache
 
 
 def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
                 tokens: jax.Array,
-                positions=None) -> Tuple[jax.Array, Dict[str, Any]]:
+                positions=None,
+                write_mask=None) -> Tuple[jax.Array, Dict[str, Any]]:
     """One decoder token against self-attn cache + cross KV cache.
     `positions`: optional (B,) per-row token positions (continuous
-    batching), defaulting to the scalar cache step counter.
+    batching), defaulting to the scalar cache step counter.  `write_mask`:
+    optional (B,) bool in-segment termination mask — masked rows leave
+    their self-attn KV slots untouched (see transformer.decode_step).
+
+    Cross attention attends only to rows < `cache['enc_pos'][b]` — the
+    per-slot encoder length clock, which is what lets one decode batch
+    mix clips of different frame counts (variable encoder lengths).
 
     As in the decoder-only path (SS Perf iteration D5), the scan reads all
     caches as xs and emits only the tiny new-token self-attn K/V; the
@@ -281,8 +312,11 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     b = x.shape[0]
     pos = cache["pos"] if positions is None \
         else jnp.asarray(positions, jnp.int32)
+    # per-row last valid cross slot; enc_pos is per-SLOT (B,), not
+    # per-layer — it rides the scan closure, not the xs
+    cross_pos = jnp.asarray(cache["enc_pos"], jnp.int32) - 1
 
-    cache_keys = sorted(k for k in cache if k != "pos")
+    cache_keys = sorted(k for k in cache if k not in ("pos", "enc_pos"))
     xs_cache = {k: cache[k] for k in cache_keys}
 
     def scan_body(x, inp):
@@ -298,10 +332,9 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
             # cross attention against the (static) encoder KV
             hx = L.rms_norm(x, cross_p["ln"], cfg.norm_eps)
             q = (hx @ cross_p["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim_)
-            enc_len = blk_cache["cross_k"].shape[2]
             o = decode_attention_combined(
                 q, blk_cache["cross_k"], blk_cache["cross_v"],
-                jnp.asarray(enc_len - 1, jnp.int32), n_chunks=1)
+                cross_pos, n_chunks=1)
             x = x + o.reshape(b, 1, -1) @ cross_p["wo"]
             x, _ = T.ffn_layer(cfg, p["ffn"], x, False)
         return x, updates
@@ -313,12 +346,21 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
 
     out_cache: Dict[str, Any] = {"pos": cache["pos"] + 1,
                                  "cross_k": cache["cross_k"],
-                                 "cross_v": cache["cross_v"]}
+                                 "cross_v": cache["cross_v"],
+                                 "enc_pos": cache["enc_pos"]}
     for pos_i, kind in enumerate(cfg.block_pattern):
         max_seq = cache[f"k{pos_i}"].shape[3]
         slot = (pos % max_seq).astype(jnp.int32)
+        if write_mask is not None:
+            slot = jnp.broadcast_to(slot.reshape(-1), (b,))
+            knew = T.masked_kv_update(cache[f"k{pos_i}"],
+                                      ys[f"knew{pos_i}"], slot, write_mask)
+            vnew = T.masked_kv_update(cache[f"v{pos_i}"],
+                                      ys[f"vnew{pos_i}"], slot, write_mask)
+        else:
+            knew, vnew = ys[f"knew{pos_i}"], ys[f"vnew{pos_i}"]
         out_cache[f"k{pos_i}"] = cache_update_stacked(
-            cache[f"k{pos_i}"], ys[f"knew{pos_i}"], slot)
+            cache[f"k{pos_i}"], knew, slot)
         out_cache[f"v{pos_i}"] = cache_update_stacked(
-            cache[f"v{pos_i}"], ys[f"vnew{pos_i}"], slot)
+            cache[f"v{pos_i}"], vnew, slot)
     return constrain(logits, "logits"), out_cache

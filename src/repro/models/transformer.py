@@ -371,18 +371,27 @@ def _decode_mamba(cfg: ArchConfig, p: Params, x: jax.Array,
 
 def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
                 tokens: jax.Array,
-                positions: Optional[jax.Array] = None
+                positions: Optional[jax.Array] = None,
+                write_mask: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One decoding step.  tokens: (B, 1) int32 (or embeds (B,1,D)).
     `positions`: optional (B,) int32 per-row token positions (continuous
     batching); defaults to the scalar cache step counter, which assumes
-    every row sits at the same offset.  Returns (logits (B, 1, V),
-    updated cache).
+    every row sits at the same offset.  `write_mask`: optional (B,) bool
+    — rows where it is False compute logits but leave ALL their cached
+    state (KV ring slots, conv window, SSM state) untouched; this is the
+    in-segment termination mask of the streamed serve loop (DESIGN.md
+    §6): a row that hit its stop token or token budget mid-segment stays
+    frozen in place until the host retires it at the segment boundary,
+    instead of smearing post-EOS junk into the slot it is about to free.
+    Returns (logits (B, 1, V), updated cache).
 
     KV caches pass through the layer scan READ-ONLY (xs); the scan emits
     only the per-layer new-token K/V (tiny), which are ring-slot-written
     into the stacked caches in ONE sharded update per cache after the
-    scan (§Perf iteration D5) — the scan never re-stacks cache slices."""
+    scan (§Perf iteration D5) — the scan never re-stacks cache slices.
+    The write mask is applied to those tiny per-layer updates (a gather
+    of the old slot values + select), never to the full cache arrays."""
     from repro.core.backstream import cache_update_stacked
     if tokens.ndim == 3:
         x = tokens.astype(jnp.dtype(cfg.dtype))
@@ -419,19 +428,52 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
     logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
 
+    b = x.shape[0]
     out_cache: Dict[str, Any] = {"pos": cache["pos"] + 1}
     for pos_i, kind in enumerate(cfg.block_pattern):
         if kind in ("full", "local"):
             max_seq = cache[f"k{pos_i}"].shape[3]
             slot = (pos % max_seq).astype(jnp.int32)
+            if write_mask is not None:
+                # per-row ring write; masked rows re-write their slot's
+                # OLD value (token-sized gather+select, not a full-cache
+                # select)
+                slot_b = jnp.broadcast_to(slot.reshape(-1), (b,))
+                knew = masked_kv_update(cache[f"k{pos_i}"],
+                                        ys[f"knew{pos_i}"], slot_b,
+                                        write_mask)
+                vnew = masked_kv_update(cache[f"v{pos_i}"],
+                                        ys[f"vnew{pos_i}"], slot_b,
+                                        write_mask)
+                slot = slot_b
+            else:
+                knew, vnew = ys[f"knew{pos_i}"], ys[f"vnew{pos_i}"]
             out_cache[f"k{pos_i}"] = cache_update_stacked(
-                cache[f"k{pos_i}"], ys[f"knew{pos_i}"], slot)
+                cache[f"k{pos_i}"], knew, slot)
             out_cache[f"v{pos_i}"] = cache_update_stacked(
-                cache[f"v{pos_i}"], ys[f"vnew{pos_i}"], slot)
+                cache[f"v{pos_i}"], vnew, slot)
         elif kind == "mamba":
-            out_cache[f"conv{pos_i}"] = ys[f"conv{pos_i}"]
-            out_cache[f"ssm{pos_i}"] = ys[f"ssm{pos_i}"]
+            for key in (f"conv{pos_i}", f"ssm{pos_i}"):
+                new = ys[key]
+                if write_mask is not None:
+                    keep = write_mask.reshape((1, b) + (1,) * (new.ndim - 2))
+                    new = jnp.where(keep, new, cache[key].astype(new.dtype))
+                out_cache[key] = new
     return constrain(logits, "logits"), out_cache
+
+
+def masked_kv_update(cache: jax.Array, new: jax.Array, slot_b: jax.Array,
+                     write_mask: jax.Array) -> jax.Array:
+    """Replace masked-out rows of a stacked one-token K/V update with the
+    cache's current value at each row's ring slot, so the subsequent
+    scatter is a no-op for those rows.  cache: (L,B,KH,S,hd); new:
+    (L,B,KH,1,hd); slot_b, write_mask: (B,).  Traffic stays token-sized:
+    one (L,B,KH,hd) gather + select, never a full-cache where()."""
+    b = cache.shape[1]
+    old = cache[:, jnp.arange(b), :, slot_b, :]          # (B,L,KH,hd)
+    old = old.transpose(1, 0, 2, 3)[:, :, :, None, :]    # (L,B,KH,1,hd)
+    return jnp.where(write_mask[None, :, None, None, None],
+                     new, old.astype(new.dtype))
 
 
 def supports_prefill_into_cache(cfg: ArchConfig) -> bool:

@@ -166,3 +166,33 @@ def test_streamed_serving_matches_whole_sequence_forward(arch_id):
         want = _reference_greedy(cfg, model, params, r.prompt, max_new,
                                  embeds=r.embeds)
         assert got[r.rid] == tuple(want), (arch_id, r.rid)
+
+
+def test_encdec_short_clip_matches_short_reference():
+    """Variable encoder lengths (ROADMAP item): a clip SHORTER than
+    cfg.enc_len is served without frontend-side padding — the prefill
+    encodes the clip at its true frame count, writes per-slot cross-KV
+    rows [0, e) (zeroing the tail) and sets the slot's enc_pos clock, and
+    decode cross-attention masks rows >= enc_pos.  Tokens must equal
+    greedy decoding with the whole-sequence forward over the SHORT
+    embeds, even while a full-length clip shares the batch."""
+    from repro.launch.serve import BatchedServer, Request
+    server = BatchedServer("whisper_large_v3", smoke=True, batch_slots=2,
+                           max_seq=32, protocol="bs", stream=True,
+                           seg_len=4)
+    cfg, model, params = server.cfg, server.model, server.params
+    rng = np.random.default_rng(21)
+    max_new = 5
+    reqs = []
+    for i, e in enumerate((cfg.enc_len - 12, cfg.enc_len)):  # short + full
+        prompt = rng.integers(1, cfg.vocab, 4 + i).astype(np.int32)
+        embeds = rng.standard_normal((e, cfg.d_model)).astype(np.float32)
+        reqs.append(Request(i, prompt, max_new, embeds=embeds))
+        server.submit(reqs[-1])
+    server.run_until_drained()
+    got = {r.rid: tuple(r.generated) for r in server.completed}
+    assert int(jnp.max(server.cache["enc_pos"])) <= cfg.enc_len
+    for r in reqs:
+        want = _reference_greedy(cfg, model, params, r.prompt, max_new,
+                                 embeds=r.embeds)
+        assert got[r.rid] == tuple(want), (r.rid, got[r.rid], want)

@@ -1,0 +1,163 @@
+"""Continuous-batching churn stress for the sampled streamed serve loop.
+
+32+ requests churn through a 4-slot server with mixed token budgets, stop
+tokens, sampling temperatures and (for whisper) mixed encoder lengths —
+exercising admission/retirement at both accounting regimes (dispatch-time
+for budget-only rows, segment-boundary for stop-token rows; DESIGN.md §6)
+across the three architecture families: mamba2 (pure SSM state), a
+decoder-only attention config (starcoder2), and whisper (enc-dec with
+per-slot cross-KV).
+
+Invariants:
+  * no slot leaks: every submitted request completes, every slot drains;
+  * per-row position clocks stay monotone — `_consume_segment` asserts
+    pos == previous pos + emitted count for every delivered row, so any
+    clock skip/rewind fails the drain itself;
+  * stop semantics: a configured stop token, if generated, is the LAST
+    token; budgets are never exceeded;
+  * greedy requests match a whole-sequence no-cache reference bitwise
+    (including stop-token truncation against the reference stream);
+  * the full stochastic workload is bitwise-identical between the
+    streamed and per-token drive modes (one PRNG chain, two schedules).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+
+ARCHES = ["mamba2_370m", "starcoder2_3b", "whisper_large_v3"]
+N_REQ = 33
+SLOTS = 4
+MAX_SEQ = 32
+SEG_LEN = 4
+N_REFERENCE = 4          # greedy requests checked against the full forward
+
+
+def _make_workload(cfg, rng):
+    """33 mixed requests.  rids 0..N_REFERENCE-1 are greedy/no-stop (the
+    whole-sequence reference cohort); the rest randomize budget,
+    temperature, nucleus, stop sets and (enc-dec) clip length."""
+    from repro.launch.serve import SamplingParams
+    reqs = []
+    for i in range(N_REQ):
+        plen = int(rng.integers(3, 7))
+        prompt = rng.integers(1, cfg.vocab, plen).astype(np.int32)
+        embeds = None
+        if cfg.enc_dec:
+            e = cfg.enc_len if i % 5 else cfg.enc_len - 12   # mixed clips
+            embeds = rng.standard_normal(
+                (e, cfg.d_model)).astype(np.float32)
+        if i < N_REFERENCE:
+            max_new, sampling = int(rng.integers(2, 7)), None
+        else:
+            max_new = int(rng.integers(1, 9))
+            kind = i % 4
+            if kind == 0:        # greedy, no stops (dispatch-time retire)
+                sampling = None
+            elif kind == 1:      # greedy + stop set (boundary retire)
+                sampling = SamplingParams(
+                    stop_tokens=(cfg.eos_token, int(rng.integers(cfg.vocab))))
+            elif kind == 2:      # stochastic, no stops
+                sampling = SamplingParams(temperature=0.9, top_p=0.85,
+                                          seed=1000 + i)
+            else:                # stochastic + stop set
+                sampling = SamplingParams(temperature=1.1, top_k=16,
+                                          seed=2000 + i,
+                                          stop_tokens=(int(
+                                              rng.integers(cfg.vocab)),))
+        reqs.append(dict(rid=i, prompt=prompt, max_new=max_new,
+                         embeds=embeds, sampling=sampling))
+    return reqs
+
+
+def _run(arch, workload, *, stream):
+    from repro.launch.serve import BatchedServer, Request
+    server = BatchedServer(arch, smoke=True, batch_slots=SLOTS,
+                           max_seq=MAX_SEQ, protocol="bs", stream=stream,
+                           seg_len=SEG_LEN)
+    for w in workload:
+        server.submit(Request(**{k: v for k, v in w.items()}))
+    server.run_until_drained(max_steps=100_000)
+    return server
+
+
+# the whole-sequence no-cache greedy reference is shared with the
+# prefill-state suite — one definition, two suites
+from test_prefill_state import _reference_greedy  # noqa: E402
+
+
+@pytest.mark.parametrize("arch", ARCHES)
+def test_churn_no_leaks_and_cross_mode_bitwise(arch):
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(42)
+    workload = _make_workload(cfg, rng)
+
+    streamed = _run(arch, workload, stream=True)
+    # -- no slot leaks, full drain
+    assert all(r is None for r in streamed.active)
+    assert not streamed.queue
+    assert len(streamed.completed) == N_REQ
+    got = {r.rid: tuple(r.generated) for r in streamed.completed}
+    assert set(got) == set(range(N_REQ))
+
+    # -- budget and stop semantics per request
+    for w in workload:
+        toks = got[w["rid"]]
+        sp = w["sampling"]
+        max_new = w["max_new"] if sp is None or sp.max_new is None \
+            else sp.max_new
+        assert 1 <= len(toks) <= max_new, (w["rid"], toks)
+        stops = set(sp.stop_tokens) if sp else set()
+        hit = [i for i, t in enumerate(toks) if t in stops]
+        if hit:
+            # the first stop hit terminates the request and is delivered
+            assert hit[0] == len(toks) - 1, (w["rid"], toks, stops)
+        else:
+            assert len(toks) == max_new, (w["rid"], toks)
+        if sp is not None and sp.temperature > 0:
+            # stochastic rows are vocab-bounded (no Megatron-pad ids)
+            assert all(0 <= t < cfg.vocab for t in toks), (w["rid"], toks)
+        else:
+            assert all(0 <= t < cfg.padded_vocab for t in toks)
+
+    # -- per-token twin: same workload, bulk-synchronous loop, bitwise
+    per_token = _run(arch, workload, stream=False)
+    got_pt = {r.rid: tuple(r.generated) for r in per_token.completed}
+    assert got_pt == got, {
+        r: (got[r], got_pt[r]) for r in got if got[r] != got_pt.get(r)}
+
+    # sanity on the sync accounting: streamed syncs << per-token syncs
+    assert streamed.decode_syncs < per_token.decode_syncs
+
+
+@pytest.mark.parametrize("arch", ARCHES)
+def test_churn_greedy_cohort_matches_whole_sequence_reference(arch):
+    """The greedy/no-stop cohort of the churn workload (admitted among
+    stochastic batch-mates, across slot reuse) must equal greedy decoding
+    with the whole-sequence forward — batch-mates and slot churn are
+    invisible to a row (per-row clocks, per-slot chains)."""
+    from repro.launch.serve import SamplingParams
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(42)
+    workload = _make_workload(cfg, rng)
+    server = _run(arch, workload, stream=True)
+    got = {r.rid: tuple(r.generated) for r in server.completed}
+
+    refs = {}
+    for w in workload[:N_REFERENCE]:
+        refs[w["rid"]] = _reference_greedy(
+            cfg, server.model, server.params, w["prompt"], w["max_new"],
+            embeds=w["embeds"])
+    for rid, want in refs.items():
+        assert got[rid] == tuple(want), (arch, rid, got[rid], want)
+
+    # stop-token truncation against the same reference stream: re-serve
+    # request 0 with its reference token at index k as the stop token
+    w = dict(workload[0])
+    k = min(1, len(refs[0]) - 1)
+    stop_tok = refs[0][k]
+    first_occ = refs[0].index(stop_tok)
+    w["sampling"] = SamplingParams(stop_tokens=(stop_tok,))
+    server2 = _run(arch, [w], stream=True)
+    toks = tuple(server2.completed[0].generated)
+    assert toks == tuple(refs[0][:first_occ + 1]), (toks, refs[0], stop_tok)
