@@ -58,7 +58,12 @@ def _parse_derived(derived: str) -> dict:
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog="Every row name and derived.* field (including the "
+               "speculative-decoding accept_rate / tokens_per_sync "
+               "metrics) is documented in benchmarks/README.md.")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as machine-readable JSON")
     ap.add_argument("--only", nargs="*", default=None,

@@ -10,6 +10,7 @@ CONFIG = ArchConfig(
     block_pattern=("mamba",),
     ssm_state=128, ssm_head_dim=64, ssm_expand=2,
     subquadratic=True,
+    draft_arch="self:12",       # 12-of-48-layer self-draft (DESIGN.md §7)
 )
 
 SMOKE = ArchConfig(
@@ -20,4 +21,5 @@ SMOKE = ArchConfig(
     block_pattern=("mamba",),
     ssm_state=16, ssm_head_dim=16, ssm_expand=2,
     subquadratic=True,
+    draft_arch="self:1",
 )

@@ -8,6 +8,7 @@ CONFIG = ArchConfig(
     vocab=131072, head_dim=128,
     eos_token=2,               # </s>
     block_pattern=("full",), rope_theta=1_000_000.0,
+    draft_arch="self:10",      # 10-of-40-layer self-draft (DESIGN.md §7)
 )
 
 SMOKE = ArchConfig(
@@ -16,4 +17,5 @@ SMOKE = ArchConfig(
     vocab=512, head_dim=16,
     eos_token=2,
     block_pattern=("full",), rope_theta=1_000_000.0,
+    draft_arch="self:1",
 )

@@ -8,6 +8,7 @@ CONFIG = ArchConfig(
     vocab=50272, head_dim=80,
     eos_token=2,               # </s>
     block_pattern=("full",),
+    draft_arch="self:8",       # 8-of-32-layer self-draft (DESIGN.md §7)
 )
 
 SMOKE = ArchConfig(
@@ -16,4 +17,5 @@ SMOKE = ArchConfig(
     vocab=512, head_dim=16,
     eos_token=2,
     block_pattern=("full",),
+    draft_arch="self:1",
 )

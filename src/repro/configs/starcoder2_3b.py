@@ -7,6 +7,7 @@ CONFIG = ArchConfig(
     vocab=49152, head_dim=128,
     eos_token=0,               # <|endoftext|>
     block_pattern=("full",),
+    draft_arch="self:7",       # 7-of-30-layer self-draft (DESIGN.md §7)
 )
 
 SMOKE = ArchConfig(
@@ -15,4 +16,5 @@ SMOKE = ArchConfig(
     vocab=512, head_dim=16,
     eos_token=2,
     block_pattern=("full",),
+    draft_arch="self:1",
 )

@@ -10,6 +10,7 @@ CONFIG = ArchConfig(
     eos_token=50257,               # <|endoftext|>
     enc_dec=True, n_enc_layers=32, enc_len=1500, frontend="audio_conv",
     block_pattern=("full",),
+    draft_arch="self:8",       # 8-of-32-decoder-layer self-draft (§7)
 )
 
 SMOKE = ArchConfig(
@@ -19,4 +20,5 @@ SMOKE = ArchConfig(
     eos_token=2,
     enc_dec=True, n_enc_layers=2, enc_len=32, frontend="audio_conv",
     block_pattern=("full",),
+    draft_arch="self:1",
 )

@@ -109,6 +109,35 @@ def sample_tokens(logits, params: BatchedSampling, keys, *,
         params.min_p, keys, vocab)
 
 
+@functools.partial(jax.jit, static_argnames=("vocab",))
+def verify_tokens(target_logits, draft_logits, draft_tokens,
+                  params: BatchedSampling, keys, *,
+                  vocab: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Per-slot speculative draft verification (DESIGN.md §7).
+    target_logits: (B, K+1, V) target logits at the K+1 verified
+    positions; draft_logits: (B, K, V) proposal logits the draft tokens
+    were sampled from; draft_tokens: (B, K); params: BatchedSampling of
+    (B,) leaves; keys: (B, 2) uint32 — one PRNG key per slot; vocab:
+    true vocabulary width when V is padded.  Returns (out_tokens
+    (B, K+1) i32, accept_len (B,) i32): a round emits
+    out_tokens[:accept_len + 1] — the accepted draft prefix plus one
+    correction/bonus token.
+
+    Semantics live in `ref.verify_tokens_reference` (the jnp oracle IS
+    the implementation): greedy rows accept while the draft matches the
+    target argmax and always emit the target argmax stream (bitwise the
+    non-speculative loop, for ANY draft); stochastic rows run standard
+    rejection sampling against the filtered distributions of
+    `ref.filtered_log_probs`, which leaves each emitted token's marginal
+    law exactly the target's sampling distribution.  As with
+    `sample_tokens` there is no Pallas lowering — two O(B·K·V) sorts
+    plus elementwise work, plain XLA on every backend, so verification
+    adds no kernel launches to the speculative segment."""
+    return _ref.verify_tokens_reference(
+        target_logits, draft_logits, draft_tokens, params.temperature,
+        params.top_k, params.top_p, params.min_p, keys, vocab)
+
+
 @functools.partial(jax.jit, static_argnames=("blk_q", "blk_n", "interpret"))
 def knn_distances(queries, db, *, blk_q: int = 128, blk_n: int = 128,
                   interpret: bool = False) -> jax.Array:

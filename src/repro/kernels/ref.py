@@ -154,12 +154,39 @@ def sample_tokens_reference(logits: jax.Array, temperature: jax.Array,
     min_p = jnp.asarray(min_p, jnp.float32).reshape(b)
 
     greedy = (temperature <= 0.0) | (top_k == 1)
+    scaled = _scaled_bounded_logits(lf, temperature, vocab)
+    order, sorted_logits, keep = _sorted_keep(scaled, top_k, top_p, min_p)
+    filtered = jnp.where(keep, sorted_logits, -jnp.inf)
+
+    gumbel = jax.vmap(
+        lambda k: jax.random.gumbel(k, (v,), jnp.float32))(keys)
+    rank = jnp.argmax(filtered + gumbel, axis=-1)             # winning RANK
+    sampled = jnp.take_along_axis(order, rank[:, None], axis=-1)[:, 0]
+    return jnp.where(greedy, jnp.argmax(lf, axis=-1),
+                     sampled).astype(jnp.int32)
+
+
+def _scaled_bounded_logits(lf: jax.Array, temperature: jax.Array,
+                           vocab: int) -> jax.Array:
+    """Temperature scaling + Megatron-pad masking (ids >= vocab -inf'd
+    BEFORE any softmax, so pad rows carry no probability mass)."""
+    v = lf.shape[-1]
     scaled = lf / jnp.maximum(temperature, 1e-6)[:, None]
     if vocab and vocab < v:
         scaled = jnp.where(jnp.arange(v)[None, :] < vocab, scaled, -jnp.inf)
+    return scaled
 
-    # Filters are computed in descending-sorted space (stable argsort —
-    # ties broken by token id, deterministically).
+
+def _sorted_keep(scaled: jax.Array, top_k: jax.Array, top_p: jax.Array,
+                 min_p: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The top_k/top_p/min_p keep mask, computed in descending-sorted
+    space (stable argsort — ties broken by token id, deterministically).
+    Shared by sampling (`sample_tokens_reference`, which draws directly
+    in sorted space) and verification (`filtered_log_probs`, which
+    scatters the mask back to token space).  Returns (order (B,V) rank →
+    token id, sorted_logits (B,V), keep (B,V) over ranks)."""
+    b, v = scaled.shape
     order = jnp.argsort(-scaled, axis=-1)                     # (B,V)
     sorted_logits = jnp.take_along_axis(scaled, order, axis=-1)
     probs = jax.nn.softmax(sorted_logits, axis=-1)
@@ -169,14 +196,151 @@ def sample_tokens_reference(logits: jax.Array, temperature: jax.Array,
     cum_before = jnp.cumsum(probs, axis=-1) - probs           # mass before i
     keep &= (cum_before < top_p[:, None]) | (ranks == 0)
     keep &= probs >= min_p[:, None] * probs[:, :1]
-    filtered = jnp.where(keep, sorted_logits, -jnp.inf)
+    return order, sorted_logits, keep
 
-    gumbel = jax.vmap(
-        lambda k: jax.random.gumbel(k, (v,), jnp.float32))(keys)
-    rank = jnp.argmax(filtered + gumbel, axis=-1)             # winning RANK
-    sampled = jnp.take_along_axis(order, rank[:, None], axis=-1)[:, 0]
-    return jnp.where(greedy, jnp.argmax(lf, axis=-1),
-                     sampled).astype(jnp.int32)
+
+def filtered_log_probs(logits: jax.Array, temperature: jax.Array,
+                       top_k: jax.Array, top_p: jax.Array,
+                       min_p: jax.Array, vocab: int = 0) -> jax.Array:
+    """(…, V) log-probabilities of the temperature/top_k/top_p/min_p
+    filtered distribution — by construction the EXACT distribution a
+    stochastic `sample_tokens_reference` row draws from (same scaling,
+    same vocab bound, same keep mask; filtered-out tokens are -inf).
+    This is the q (target) and p (draft) of the speculative verification
+    identity (DESIGN.md §7): rejection-sampling against these
+    log-probabilities leaves the per-token output law equal to plain
+    sampling from q.
+
+    logits: (B, V) or (B, K, V) — a leading (B,) of per-slot parameters
+    broadcasts over the middle K axis."""
+    shape = logits.shape
+    v = shape[-1]
+    lf = logits.astype(jnp.float32).reshape(-1, v)
+    rep = lf.shape[0] // temperature.shape[0]
+    t = jnp.repeat(jnp.asarray(temperature, jnp.float32), rep)
+    tk = jnp.repeat(jnp.asarray(top_k, jnp.int32), rep)
+    tp = jnp.repeat(jnp.asarray(top_p, jnp.float32), rep)
+    mp = jnp.repeat(jnp.asarray(min_p, jnp.float32), rep)
+    scaled = _scaled_bounded_logits(lf, t, vocab)
+    order, _, keep = _sorted_keep(scaled, tk, tp, mp)
+    inv = jnp.argsort(order, axis=-1)                  # token id -> rank
+    keep_tok = jnp.take_along_axis(keep, inv, axis=-1)
+    filtered = jnp.where(keep_tok, scaled, -jnp.inf)
+    return jax.nn.log_softmax(filtered, axis=-1).reshape(shape)
+
+
+def verify_tokens_reference(target_logits: jax.Array,
+                            draft_logits: jax.Array,
+                            draft_tokens: jax.Array,
+                            temperature: jax.Array, top_k: jax.Array,
+                            top_p: jax.Array, min_p: jax.Array,
+                            keys: jax.Array, vocab: int = 0
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Speculative draft-and-verify acceptance — the oracle for
+    `ops.verify_tokens` and the single definition of its semantics
+    (DESIGN.md §7).
+
+    target_logits: (B, K+1, V) — the target model's logits at the K+1
+      verified positions (position j conditions on the emitted prefix
+      plus draft tokens 0..j-1; position K is the bonus position
+      conditioned on all K drafts).
+    draft_logits:  (B, K, V) — the draft logits each draft token was
+      sampled from (the proposal distribution, after the row's own
+      filters — the draft MUST have sampled through `sample_tokens` with
+      the same per-row parameters).
+    draft_tokens:  (B, K) int32; keys: (B, 2) uint32, one per slot.
+    Returns (out_tokens (B, K+1) i32, accept_len (B,) i32): the emitted
+    tokens of the round are out_tokens[:accept_len + 1] — accept_len
+    accepted draft tokens followed by one correction/bonus token.
+
+    Per-row semantics:
+
+      * greedy rows (``temperature <= 0`` or ``top_k == 1``) — accept
+        draft j iff it equals ``argmax(target_logits[j])``; the token
+        after the accepted prefix is that position's argmax.  Since every
+        accepted draft equals the argmax too, ``out_tokens`` is simply
+        the target argmax at all K+1 positions: the emitted stream is
+        bitwise the non-speculative greedy stream, for ANY draft (draft
+        quality moves the accept rate, never the tokens).  As in
+        `sample_tokens_reference`, greedy argmax is deliberately
+        unbounded by `vocab` (historical greedy parity).
+      * stochastic rows — standard speculative rejection sampling over
+        the FILTERED distributions q_j (target) and p_j (draft) from
+        `filtered_log_probs`: draft j is accepted with probability
+        min(1, q_j(g_j)/p_j(g_j)); the first rejected position emits a
+        sample from the residual distribution norm(max(q_j − p_j, 0))
+        (falling back to q_j when the residual has no mass, i.e. q = p);
+        a fully accepted round emits a bonus sample from q_K.  The
+        marginal law of each emitted token is exactly q — sampling-
+        distribution-identical to the non-speculative loop, though not
+        bitwise (the PRNG chain is consumed per ROUND here, per token
+        there).
+
+    All draws derive from the row's key (split into accept-uniforms /
+    residual-Gumbels / bonus-Gumbels), so a fixed key gives a bitwise-
+    deterministic verdict — the segment-replay property of the streamed
+    serve loop."""
+    b, kp1, v = target_logits.shape
+    k = kp1 - 1
+    assert k >= 1, "draft depth must be >= 1"
+    temperature = jnp.asarray(temperature, jnp.float32).reshape(b)
+    top_k = jnp.asarray(top_k, jnp.int32).reshape(b)
+    top_p = jnp.asarray(top_p, jnp.float32).reshape(b)
+    min_p = jnp.asarray(min_p, jnp.float32).reshape(b)
+    greedy = (temperature <= 0.0) | (top_k == 1)
+    draft_tokens = jnp.asarray(draft_tokens, jnp.int32)
+
+    # -- greedy path: accept while the draft matches the target argmax
+    tgt_argmax = jnp.argmax(target_logits.astype(jnp.float32),
+                            axis=-1).astype(jnp.int32)         # (B,K+1)
+    g_match = (draft_tokens == tgt_argmax[:, :k]).astype(jnp.int32)
+    g_accept = jnp.sum(jnp.cumprod(g_match, axis=-1), axis=-1)  # (B,)
+
+    # -- stochastic path: rejection sampling over filtered distributions
+    lq = filtered_log_probs(target_logits, temperature, top_k, top_p,
+                            min_p, vocab)                      # (B,K+1,V)
+    lp = filtered_log_probs(draft_logits, temperature, top_k, top_p,
+                            min_p, vocab)                      # (B,K,V)
+    lq_g = jnp.take_along_axis(lq[:, :k], draft_tokens[..., None],
+                               axis=-1)[..., 0]                # (B,K)
+    lp_g = jnp.take_along_axis(lp, draft_tokens[..., None],
+                               axis=-1)[..., 0]
+
+    def row_draws(key):
+        ku, kc, kb = jax.random.split(key, 3)
+        return (jax.random.uniform(ku, (k,), jnp.float32),
+                jax.random.gumbel(kc, (k, v), jnp.float32),
+                jax.random.gumbel(kb, (v,), jnp.float32))
+
+    u, g_res, g_bonus = jax.vmap(row_draws)(keys)
+    # accept iff u <= q(g)/p(g), in log space; a draft token the target
+    # filtered out entirely (q = 0) is always rejected
+    accept = (jnp.log(u) + lp_g <= lq_g) & (lq_g > -jnp.inf)
+    s_accept = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=-1),
+                       axis=-1)                                # (B,)
+
+    # residual distribution at every candidate rejection position;
+    # q == p (no residual mass) falls back to q itself
+    q = jnp.exp(lq[:, :k])
+    p = jnp.exp(lp)
+    res = jnp.maximum(q - p, 0.0)                              # (B,K,V)
+    res_ok = jnp.sum(res, axis=-1, keepdims=True) > 0.0
+    res_l = jnp.where(res_ok, jnp.log(res), lq[:, :k])
+    corr = jnp.argmax(res_l + g_res, axis=-1).astype(jnp.int32)  # (B,K)
+    bonus = jnp.argmax(lq[:, k] + g_bonus, axis=-1).astype(jnp.int32)
+
+    out_s = jnp.concatenate([draft_tokens, bonus[:, None]], axis=1)
+    at = jnp.minimum(s_accept, k)                              # (B,)
+    fix = jnp.where(s_accept < k,
+                    jnp.take_along_axis(
+                        corr, jnp.minimum(s_accept, k - 1)[:, None],
+                        axis=-1)[:, 0],
+                    bonus)
+    out_s = out_s.at[jnp.arange(b), at].set(fix)
+
+    out = jnp.where(greedy[:, None], tgt_argmax, out_s)
+    accept_len = jnp.where(greedy, g_accept, s_accept)
+    return out.astype(jnp.int32), accept_len.astype(jnp.int32)
 
 
 # --------------------------------------------------------------------------

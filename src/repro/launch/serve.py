@@ -49,6 +49,18 @@ encoder-decoder configs additionally run the encoder and write per-slot
 cross-attention K/V (encdec.prefill_into_cache).  The old last-token
 seeding — which dropped every other prompt token's KV and pinned all
 rows to a scalar position clock — is gone.
+
+Speculative decoding (`spec=True`, DESIGN.md §7) layers draft-and-verify
+on top of the streamed segments: a cheap draft model (a truncated-layer
+self-draft sliced from the target's own blocks, or any registered arch
+sharing the vocabulary) proposes `spec_k` tokens per slot inside the
+jitted segment, the target verifies all k+1 positions in ONE batched
+multi-position forward, and `ops.verify_tokens` applies the standard
+rejection-sampling correction — so each segment emits between `rounds`
+and `rounds·(k+1)` tokens per slot at the SAME one-host-sync-per-segment
+cost, growing tokens-per-host-sync by the accept rate.  Greedy streams
+are bitwise-identical to non-speculative serving for any draft; sampled
+streams are distribution-identical.
 """
 from __future__ import annotations
 
@@ -130,13 +142,22 @@ class Request:
     generated — filled by the server: the generated tokens in order
                 (<= max_new of them; ends with a stop token iff one was
                 hit).  Independent of which slot or batch the request
-                shared (per-row position clocks, per-slot PRNG chains)."""
+                shared (per-row position clocks, per-slot PRNG chains).
+    spec_accepted / spec_proposed — filled at retirement under
+                speculative serving (DESIGN.md §7): this request's
+                lifetime draft-acceptance record, read from the device
+                SlotState counters (the per-request numbers the host
+                cannot derive from segment outputs once slots are
+                reused).  None outside speculative mode (or for
+                requests that finished at admission)."""
     rid: int
     prompt: np.ndarray            # (prompt_len,) int32
     max_new: int
     embeds: Optional[np.ndarray] = None
     sampling: Optional[SamplingParams] = None
     generated: Optional[List[int]] = None
+    spec_accepted: Optional[int] = None
+    spec_proposed: Optional[int] = None
 
 
 def _prefill_bucket(n: int, cap: int) -> int:
@@ -200,12 +221,31 @@ class BatchedServer:
                   double-buffered device_get; ~1 host sync per seg_len
                   tokens.  Both modes emit identical tokens (the PRNG
                   chain is per-slot per-step, not per-dispatch).
+
+    Speculative mode (`spec=True`, DESIGN.md §7): the same two drive
+    loops run draft-and-verify segments instead — `seg_len` rounds of
+    (k-token draft, one multi-position verify) per streamed dispatch
+    (one round per `step()`), so a segment delivers a VARIABLE
+    `rounds..rounds·(k+1)` tokens per row.  Because the emit count is
+    accept-dependent, no row's usage is knowable at dispatch: every row
+    takes the segment-boundary accounting regime below (the one stop-
+    token rows already use), trading one segment of refill lag for the
+    accept-rate multiple on tokens/sync.  Accept accounting is
+    two-level: server totals (`draft_accepted`/`draft_proposed`, the
+    benchmark's accept-rate source) are derived per segment from the
+    emit masks and accept-length outputs, while each request's LIFETIME
+    record rides the device SlotState counters and is stamped onto the
+    `Request` (`spec_accepted`/`spec_proposed`) at retirement — in a
+    drained server the two agree exactly (asserted in
+    tests/test_speculative.py).
     """
 
     def __init__(self, arch_id: str, *, smoke: bool = True,
                  batch_slots: int = 4, max_seq: int = 256,
                  protocol: str = "axle", chunks_per_shard: int = 1,
-                 mesh=None, seg_len: int = 8, stream: bool = False):
+                 mesh=None, seg_len: int = 8, stream: bool = False,
+                 spec: bool = False, spec_k: int = 3,
+                 draft_arch: Optional[str] = None):
         self.cfg = (get_smoke_config(arch_id) if smoke
                     else get_config(arch_id))
         self.model = get_model(self.cfg)
@@ -240,8 +280,65 @@ class BatchedServer:
             steps_lib.make_decode_segment(self.cfg, seg_len, plain=True),
             donate_argnums=(1,))
         # device-side per-slot decode state (tokens, positions, PRNG
-        # chains, budgets, alive masks, sampling params, stop sets)
+        # chains, budgets, alive masks, sampling params, stop sets,
+        # accept counters)
         self.state = steps_lib.init_slot_state(batch_slots)
+        # speculative draft-and-verify decoding (DESIGN.md §7): resolve
+        # the draft — "self[:N]" slices the target's first N blocks into
+        # a truncated-layer self-draft (N defaults to half the depth;
+        # N = n_blocks is the bitwise accept-rate-1 configuration), any
+        # other value names a registered arch sharing the vocabulary.
+        self.spec = spec
+        self.spec_k = spec_k
+        self.draft_accepted = 0
+        self.draft_proposed = 0
+        if spec:
+            da = draft_arch or self.cfg.draft_arch
+            assert da, (f"{arch_id}: speculative serving needs a draft "
+                        "(ArchConfig.draft_arch or the draft_arch ctor arg)")
+            if da == "self" or da.startswith("self:"):
+                n = (int(da.split(":", 1)[1]) if ":" in da
+                     else max(1, self.cfg.n_blocks // 2))
+                self.draft_cfg = steps_lib.self_draft_config(self.cfg, n)
+                self.draft_params = steps_lib.self_draft_params(
+                    self.cfg, self.params, n)
+            else:
+                self.draft_cfg = (get_smoke_config(da) if smoke
+                                  else get_config(da))
+                assert self.draft_cfg.vocab == self.cfg.vocab, \
+                    (self.cfg.vocab, self.draft_cfg.vocab)
+                assert self.draft_cfg.enc_dec == self.cfg.enc_dec
+                self.draft_params = get_model(self.draft_cfg).init_params(
+                    self.draft_cfg, jax.random.key(1))
+            self.draft_model = get_model(self.draft_cfg)
+            self.draft_cache = self.draft_model.init_cache(
+                self.draft_cfg, batch_slots, max_seq)
+            self.draft_prefill_fn = jax.jit(
+                steps_lib.make_prefill_into_cache(self.draft_cfg),
+                donate_argnums=(1,))
+            # one spec round per step() dispatch, seg_len rounds per
+            # streamed dispatch, each with a `plain` greedy fast-path
+            # twin (argmax drafts + prefix-match verify, no sampling or
+            # Gumbel epilogues) picked at dispatch exactly like the
+            # non-speculative plain variants; jit is lazy, so a variant
+            # never dispatched is never compiled (donating BOTH caches)
+            self.spec_step_fn = jax.jit(
+                steps_lib.make_spec_decode_segment(
+                    self.cfg, self.draft_cfg, 1, spec_k),
+                donate_argnums=(2, 3))
+            self.spec_step_plain_fn = jax.jit(
+                steps_lib.make_spec_decode_segment(
+                    self.cfg, self.draft_cfg, 1, spec_k, plain=True),
+                donate_argnums=(2, 3))
+            self.spec_segment_fn = jax.jit(
+                steps_lib.make_spec_decode_segment(
+                    self.cfg, self.draft_cfg, seg_len, spec_k),
+                donate_argnums=(2, 3))
+            self.spec_segment_plain_fn = jax.jit(
+                steps_lib.make_spec_decode_segment(
+                    self.cfg, self.draft_cfg, seg_len, spec_k,
+                    plain=True),
+                donate_argnums=(2, 3))
         # every registered config has a real prefill path (attention,
         # SSM/hybrid state capture, enc-dec) — admission never degrades
         # to last-token seeding.
@@ -298,6 +395,16 @@ class BatchedServer:
             logits, self.cache = self.prefill_fn(
                 self.params, self.cache, jnp.asarray(padded), slot, plen,
                 *args)
+            if self.spec:
+                # the draft keeps its OWN prompt state per slot — same
+                # prefill machinery against the (sliced or separate)
+                # draft parameters; its last-token logits are discarded
+                # (the first token is always sampled from the TARGET).
+                # Known admission-cost gap: for enc-dec self-drafts this
+                # re-runs the shared encoder (ROADMAP open item).
+                _, self.draft_cache = self.draft_prefill_fn(
+                    self.draft_params, self.draft_cache,
+                    jnp.asarray(padded), slot, plen, *args)
         return logits
 
     def _admit(self, slot: int, req: Request) -> bool:
@@ -310,6 +417,11 @@ class BatchedServer:
         sp = req.sampling or GREEDY
         assert len(sp.stop_tokens) <= steps_lib.MAX_STOP_TOKENS, sp
         max_new = sp.max_new if sp.max_new is not None else req.max_new
+        if self.spec:
+            # a verify forward ring-writes up to spec_k junk rows past a
+            # row's final position; keep them off the valid prefix
+            assert len(req.prompt) + max_new + self.spec_k <= self.max_seq, \
+                (len(req.prompt), max_new, self.spec_k, self.max_seq)
         logits = self._prefill(slot, req)
         key, sub = jax.random.split(jax.random.PRNGKey(sp.seed))
         samp1 = ops.BatchedSampling(
@@ -361,7 +473,15 @@ class BatchedServer:
         is greedy with no stop set — the segment can take the fast-path
         variant (no sampling epilogue).  The variants interleave freely
         because greedy rows never READ their keys and sampling params are
-        fixed at admission (see make_decode_segment's key-state note)."""
+        fixed at admission (see make_decode_segment's key-state note).
+
+        Speculative mode (DESIGN.md §7) chooses the spec segment for the
+        whole batch instead, and a speculative segment's per-row emit
+        count is accept-dependent — unknowable at dispatch — so EVERY
+        row becomes `(req, None)`: the device's alive mask and budget
+        counters are authoritative and `_consume_segment` retires rows
+        one overlapped device_get later (`plain` is returned False; the
+        caller dispatches the spec variant)."""
         rows: Dict[int, Any] = {}
         plain = True
         for s in range(self.batch):
@@ -369,6 +489,15 @@ class BatchedServer:
             if req is None:
                 continue
             sp = req.sampling or GREEDY
+            if self.spec:
+                # the `plain` flag still gates the greedy fast-path
+                # (here: the plain spec-segment twin); only the
+                # dispatch-time retirement of the budget regime is lost
+                if not (sp.temperature <= 0 or sp.top_k == 1) \
+                        or sp.stop_tokens:
+                    plain = False
+                rows[s] = (req, None)
+                continue
             if not (sp.temperature <= 0 or sp.top_k == 1):
                 plain = False
             if sp.stop_tokens:
@@ -388,13 +517,25 @@ class BatchedServer:
     def step(self) -> None:
         """One token for every active slot: a seg_len-1 segment through
         the same sampling machinery as the streamed loop, consumed
-        synchronously — one dispatch + one host sync per token."""
+        synchronously — one dispatch + one host sync per token.  In
+        speculative mode this is one draft-and-verify ROUND per dispatch
+        (up to spec_k+1 tokens), still consumed synchronously."""
         self._fill_slots()
         if all(r is None for r in self.active):
             return
         rows, plain = self._dispatch_rows(1)
-        fn = self.step_plain_fn if plain else self.step_fn
         with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
+            if self.spec:
+                fn = self.spec_step_plain_fn if plain else self.spec_step_fn
+                seg, emit, alens, self.state, self.cache, \
+                    self.draft_cache = fn(
+                        self.params, self.draft_params, self.cache,
+                        self.draft_cache, self.state)
+                self.steps += self.spec_k + 1
+                self._consume_segment(seg, emit, self.state, rows,
+                                      alens=alens)
+                return
+            fn = self.step_plain_fn if plain else self.step_fn
             seg, emit, self.state, self.cache = fn(
                 self.params, self.cache, self.state)
         self.steps += 1
@@ -413,25 +554,36 @@ class BatchedServer:
         the device-side termination verdicts (stop tokens / budgets) back
         to the host — see `_dispatch_rows` for which of the two
         accounting regimes each row is under."""
-        pending = None           # (segment, emit masks, state, rows)
+        pending = None     # (segment, emit masks, state, rows, alens)
         while True:
             self._fill_slots()
             nxt_pending = None
             if self.steps < max_steps \
                     and any(r is not None for r in self.active):
                 rows, plain = self._dispatch_rows(self.seg_len)
-                fn = self.segment_plain_fn if plain else self.segment_fn
                 with self._ctx(), sh.use_rules(self.rules), \
                         use_offload(self.offload):
-                    seg, emit, self.state, self.cache = fn(
-                        self.params, self.cache, self.state)
-                self.steps += self.seg_len
+                    if self.spec:
+                        fn = (self.spec_segment_plain_fn if plain
+                              else self.spec_segment_fn)
+                        seg, emit, alens, self.state, self.cache, \
+                            self.draft_cache = fn(
+                                self.params, self.draft_params,
+                                self.cache, self.draft_cache, self.state)
+                        self.steps += self.seg_len * (self.spec_k + 1)
+                    else:
+                        fn = (self.segment_plain_fn if plain
+                              else self.segment_fn)
+                        seg, emit, self.state, self.cache = fn(
+                            self.params, self.cache, self.state)
+                        alens = None
+                        self.steps += self.seg_len
                 self.segments_dispatched += 1
-                nxt_pending = (seg, emit, self.state, rows)
+                nxt_pending = (seg, emit, self.state, rows, alens)
             if pending is not None:
                 # ONE host sync per segment; overlaps the segment just
                 # dispatched above.
-                self._consume_segment(*pending)
+                self._consume_segment(*pending[:4], alens=pending[4])
             pending = nxt_pending
             if pending is not None:
                 continue
@@ -440,13 +592,32 @@ class BatchedServer:
             if not self.queue and all(r is None for r in self.active):
                 return
 
-    def _consume_segment(self, seg, emit, state, rows) -> None:
+    def _consume_segment(self, seg, emit, state, rows,
+                         alens=None) -> None:
         """Deliver one segment's tokens and apply the device's termination
         verdicts.  `state` is the SlotState returned BY that segment (a
         later admission's .at[] writes produce new arrays, so this
-        snapshot is stable even with a newer segment already in flight)."""
-        arr, em, alive, rem, pos = jax.device_get(
-            (seg, emit, state.alive, state.remaining, state.positions))
+        snapshot is stable even with a newer segment already in flight).
+
+        Speculative segments (DESIGN.md §7) additionally hand back the
+        per-round accept lengths: with per-row round emit counts m and
+        accept lengths a, a round proposed spec_k drafts (if the row was
+        alive, i.e. m > 0) and emitted min(m, a) of them — accumulated
+        into `draft_accepted`/`draft_proposed` for the accept-rate rows
+        of benchmarks/decode_stream.py.  The device SlotState's
+        cumulative accepted/proposed counters carry each REQUEST's
+        lifetime record across segments; they are stamped onto the
+        request at retirement (the snapshot is the one the row died in,
+        so a later admission's counter reset cannot race it)."""
+        # ONE device_get — the sync the decode_syncs counter stands for;
+        # the speculative extras ride the same transfer
+        fetch = (seg, emit, state.alive, state.remaining, state.positions)
+        if alens is not None:
+            fetch += (alens, state.accepted, state.proposed)
+        got = jax.device_get(fetch)
+        arr, em, alive, rem, pos = got[:5]
+        if alens is not None:
+            al, acc, prop = got[5:]
         self.host_syncs += 1
         self.decode_syncs += 1
         for s, (req, take) in rows.items():
@@ -454,6 +625,10 @@ class BatchedServer:
             for t in toks:
                 req.generated.append(int(t))
             self.tokens_emitted += len(toks)
+            if alens is not None:
+                m_r = em[s].reshape(al.shape[1], -1).sum(axis=1)
+                self.draft_proposed += int((m_r > 0).sum()) * self.spec_k
+                self.draft_accepted += int(np.minimum(m_r, al[s]).sum())
             if take is not None:
                 # device budget accounting must agree with the host's
                 # dispatch-time prediction for stop-free rows
@@ -467,6 +642,9 @@ class BatchedServer:
                 if take is None:
                     self.remaining[s] = int(rem[s])
                     if not alive[s]:
+                        if alens is not None:
+                            req.spec_accepted = int(acc[s])
+                            req.spec_proposed = int(prop[s])
                         self.completed.append(req)
                         self.active[s] = None
 
@@ -505,12 +683,22 @@ def main() -> int:
                     help="base sampling seed (request i uses seed + i)")
     ap.add_argument("--stop-eos", action="store_true",
                     help="stop each request at the config's eos_token")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative draft-and-verify segments "
+                         "(DESIGN.md §7)")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="draft tokens proposed per verify round")
+    ap.add_argument("--draft", default=None,
+                    help="draft arch: 'self[:N]' (truncated-layer "
+                         "self-draft) or a registered arch id; defaults "
+                         "to the config's draft_arch")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
     server = BatchedServer(args.arch, smoke=True, batch_slots=args.slots,
                            protocol=args.protocol, stream=args.stream,
-                           seg_len=args.seg_len)
+                           seg_len=args.seg_len, spec=args.spec,
+                           spec_k=args.spec_k, draft_arch=args.draft)
     stops = (server.cfg.eos_token,) if args.stop_eos else ()
     sampled = (args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0
                or args.stop_eos)
@@ -539,10 +727,15 @@ def main() -> int:
     toks = sum(len(r.generated) for r in server.completed)
     mode = "stream" if args.stream else "per-token"
     spt = server.decode_syncs / max(1, toks)
+    spec = ""
+    if args.spec:
+        rate = server.draft_accepted / max(1, server.draft_proposed)
+        spec = (f" spec_k={args.spec_k} accept_rate={rate:.2f} "
+                f"tokens/sync={toks / max(1, server.decode_syncs):.2f}")
     print(f"[serve] protocol={args.protocol} mode={mode} "
           f"sampling={'on' if sampled else 'greedy'} "
           f"requests={len(server.completed)} tokens={toks} "
-          f"steps={server.steps} syncs/token={spt:.3f} "
+          f"steps={server.steps} syncs/token={spt:.3f}{spec} "
           f"({toks / dt:.1f} tok/s on CPU)")
     return 0
 

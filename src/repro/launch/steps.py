@@ -25,24 +25,69 @@ class SlotState(NamedTuple):
     arXiv 2309.04011 argues must ride the async submission path alongside
     the data.
 
-    tokens/positions are the PR-1 carries (current token + per-row
-    position clock).  New in the sampling subsystem (DESIGN.md §6):
+    Field-by-field invariants (DESIGN.md §6 for sampling/termination,
+    §7 for the speculative counters):
 
-      keys      — (B, 2) uint32 per-slot PRNG chains.  Each scan step
-                  splits every row's key once (consume-on-emit), so token
-                  k of a request is always sampled with the k-th split of
-                  its seed key: bitwise-reproducible across seg_len
-                  segmentations, slots, and per-token vs streamed loops.
-      remaining — (B,) i32 token budget left (max_new accounting).
-      alive     — (B,) bool: row emits this step.  Cleared DEVICE-SIDE
-                  when a sampled token hits the row's stop set or the
-                  budget runs out; dead rows freeze (token, position,
-                  cache writes masked) until the host retires them at a
-                  segment boundary.
+      tokens    — (B, 1) i32: the CURRENT token of each row — the most
+                  recently emitted token, whose K/V (or recurrent
+                  update) is NOT yet in the cache.  The cache holds
+                  exactly the tokens at positions [0, positions[b]);
+                  tokens[b] sits AT positions[b] and rides decode
+                  attention as the merged extra partial until its own
+                  decode step ring-writes it.
+      positions — (B,) i32 per-row position clocks: the sequence
+                  position of tokens[b] = the number of prompt +
+                  generated tokens strictly before it.  Advances by
+                  exactly the number of tokens a row emits (one per
+                  alive step in plain segments; the variable accepted
+                  count m in speculative segments) and NEVER for frozen
+                  rows — the continuous-batching invariant every
+                  position-dependent computation (RoPE, cache validity,
+                  ring-slot writes, sliding windows) hangs off.
+      keys      — (B, 2) uint32 per-slot PRNG chains, seeded from the
+                  request's SamplingParams.seed at admission (split #0
+                  samples the first token from the prefill logits).
+                  Split discipline: plain sampled segments split every
+                  row's key once per SCAN STEP (consume-on-emit), so
+                  token k of a request is always sampled with the k-th
+                  split of its seed — bitwise-reproducible across
+                  seg_len segmentations, slots, and per-token vs
+                  streamed loops.  Speculative segments split once per
+                  ROUND (the split fans out into draft-step and verify
+                  draws), so stochastic rows are reproducible for a
+                  fixed (seed, k, rounds) but only DISTRIBUTION-equal to
+                  the plain chain; greedy rows never read their keys,
+                  which is why greedy streams stay bitwise-identical
+                  across all loop modes and variants.  Keys never
+                  round-trip through the host after admission.
+      remaining — (B,) i32 token budget left (max_new accounting, device-
+                  authoritative; the host's dispatch-time copy is a
+                  prediction for stop-free rows in plain segments and
+                  purely informational in speculative mode).
+      alive     — (B,) bool: row emits this step/round.  Cleared DEVICE-
+                  SIDE when an emitted token hits the row's stop set or
+                  the budget runs out; a dead row FREEZES — tokens,
+                  positions, keys' consumers, and all cached state
+                  (write_mask=alive masks KV ring slots, conv windows,
+                  SSM states, draft caches) hold still until the host
+                  retires the row at a segment boundary.  `alive` is
+                  also the write-mask handed to decode_step /
+                  decode_verify — one mask, every state store.
       sampling  — per-slot temperature/top_k/top_p/min_p
-                  (ops.BatchedSampling).
+                  (ops.BatchedSampling).  Fixed at admission: a request
+                  cannot flip greedy↔stochastic mid-stream (the variant-
+                  interleaving and key-consumption arguments rely on it).
       stop      — (B, MAX_STOP_TOKENS) i32 stop-token ids, -1-padded
-                  (-1 never matches a sampled token, which is >= 0).
+                  (-1 never matches an emitted token, which is >= 0).
+      accepted  — (B,) i32: cumulative count of DRAFT tokens this
+                  request emitted via speculative acceptance (correction
+                  and bonus tokens excluded).  Zeroed at admission;
+                  stays 0 in non-speculative serving.
+      proposed  — (B,) i32: cumulative count of draft tokens proposed
+                  for this row (k per alive speculative round).
+                  accepted/proposed is the per-request accept rate the
+                  benchmark's tokens-per-sync model is built on
+                  (DESIGN.md §7).
     """
     tokens: jax.Array             # (B, 1) i32
     positions: jax.Array          # (B,) i32
@@ -51,6 +96,8 @@ class SlotState(NamedTuple):
     alive: jax.Array              # (B,) bool
     sampling: ops.BatchedSampling
     stop: jax.Array               # (B, MAX_STOP_TOKENS) i32
+    accepted: jax.Array           # (B,) i32
+    proposed: jax.Array           # (B,) i32
 
 
 def init_slot_state(batch: int) -> SlotState:
@@ -62,7 +109,9 @@ def init_slot_state(batch: int) -> SlotState:
         remaining=jnp.zeros((batch,), jnp.int32),
         alive=jnp.zeros((batch,), bool),
         sampling=ops.greedy_sampling(batch),
-        stop=jnp.full((batch, MAX_STOP_TOKENS), -1, jnp.int32))
+        stop=jnp.full((batch, MAX_STOP_TOKENS), -1, jnp.int32),
+        accepted=jnp.zeros((batch,), jnp.int32),
+        proposed=jnp.zeros((batch,), jnp.int32))
 
 
 def admit_slot(state: SlotState, slot: int, *, token: int, position: int,
@@ -84,7 +133,9 @@ def admit_slot(state: SlotState, slot: int, *, token: int, position: int,
             top_k=s.sampling.top_k.at[slot].set(top_k),
             top_p=s.sampling.top_p.at[slot].set(top_p),
             min_p=s.sampling.min_p.at[slot].set(min_p)),
-        stop=s.stop.at[slot].set(stop))
+        stop=s.stop.at[slot].set(stop),
+        accepted=s.accepted.at[slot].set(0),
+        proposed=s.proposed.at[slot].set(0))
 
 
 def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, *,
@@ -210,6 +261,223 @@ def make_decode_segment(cfg: ArchConfig, seg_len: int, *,
         state = state._replace(tokens=toks, positions=pos, keys=keys,
                                remaining=remaining, alive=alive)
         return seq.T, emit.T, state, cache    # seq.T/emit.T: (B, seg_len)
+
+    return segment
+
+
+def self_draft_config(cfg: ArchConfig, n_blocks: int) -> ArchConfig:
+    """The truncated-layer self-draft architecture: the target's first
+    `n_blocks` pattern blocks as a standalone model (DESIGN.md §7).  The
+    draft shares the target's embedding/unembedding and layer geometry,
+    so its caches and decode steps come from the same model functions."""
+    import dataclasses
+    assert 1 <= n_blocks <= cfg.n_blocks, (n_blocks, cfg.n_blocks)
+    return dataclasses.replace(
+        cfg, arch_id=f"{cfg.arch_id}_draft{n_blocks}",
+        n_layers=n_blocks * len(cfg.block_pattern))
+
+
+def self_draft_params(cfg: ArchConfig, params, n_blocks: int):
+    """Slice the target's stacked block parameters down to the first
+    `n_blocks` blocks — a truncated-layer self-draft needs NO parameters
+    of its own (embed / final norms / encoder are shared by reference;
+    only the per-block stacks are sliced).  The slices are views of the
+    same initialization, so a full-depth self-draft (n_blocks ==
+    cfg.n_blocks) is bitwise the target — the accept-rate-1 edge case
+    the tests and benchmarks pin down."""
+    sliced = dict(params)
+    for key in ("blocks", "dec_blocks", "cross"):
+        if key in params:
+            sliced[key] = jax.tree_util.tree_map(
+                lambda a: a[:n_blocks], params[key])
+    return sliced
+
+
+def make_spec_decode_segment(cfg: ArchConfig, draft_cfg: ArchConfig,
+                             rounds: int, k: int, *, plain: bool = False):
+    """(params, draft_params, cache, draft_cache, state: SlotState) ->
+       (segment (B, rounds*(k+1)), emitted (B, rounds*(k+1)) bool,
+        accept_lens (B, rounds) i32, state, cache, draft_cache).
+
+    The speculative twin of `make_decode_segment` (DESIGN.md §7): each
+    of `rounds` scan iterations is one draft-and-verify round —
+
+      1. DRAFT: k sequential draft decode steps propose g_0..g_{k-1},
+         plus one sample-free absorb step that folds g_{k-1} into the
+         draft's own state (so a fully-accepted round leaves the draft
+         cache consistent).  Proposals are sampled through
+         `ops.sample_tokens` with the row's OWN sampling parameters, so
+         the proposal distribution is exactly the p_j that
+         `ops.verify_tokens` corrects against.
+      2. VERIFY: ONE multi-position `decode_verify` forward of the
+         target over [current, g_0..g_{k-1}] — k+1 positions whose
+         logits are each bitwise what sequential decoding would have
+         produced (transformer._verify_attn).
+      3. ACCEPT: `ops.verify_tokens` returns the accepted prefix length
+         and the correction/bonus token; the round emits m = accept+1
+         tokens, clipped by the row's budget and truncated at the first
+         stop-set hit (both device-side, as in §6).
+      4. ADVANCE + ROLLBACK: positions advance by the PER-ROW m
+         (variable advance is free under the per-row position clocks);
+         attention junk past the new clock is invisible by construction
+         (rollback-as-masked-write: rejected rows were written but sit
+         at slots >= the clock), and recurrent (conv, ssm) state — which
+         has no clock to hide behind — is rolled back by GATHERING
+         snapshot m-1 from the per-step states both forwards emitted.
+
+    Tokens-per-host-sync: a plain segment emits seg_len tokens per
+    dispatch; a speculative segment emits between `rounds` (all drafts
+    rejected) and `rounds·(k+1)` (all accepted) — the accept-rate →
+    tokens/sync model DESIGN.md §7 derives and
+    benchmarks/decode_stream.py's `stream.spec` rows measure.
+
+    RNG: one key split per round per row (see SlotState.keys); greedy
+    rows consume nothing and emit the target argmax stream bitwise, for
+    ANY draft.
+
+    `plain=True` builds the greedy fast-path twin (the §6 `plain`
+    pattern, speculated): draft proposals are raw argmax, verification
+    is prefix-match-vs-argmax with no filtered-distribution math, no
+    Gumbel draws and no key splits — picked by the server whenever
+    every active row is greedy with no stop set (the default workload),
+    bitwise-identical tokens and accept lengths to the sampled variant
+    on such batches.  The PR-3 key-state caveat carries over verbatim:
+    the sampled variant splits every row's key once per round while
+    plain splits none, safe only because greedy rows never READ their
+    keys and sampling params are fixed at admission."""
+    model = get_model(cfg)
+    draft_model = get_model(draft_cfg)
+    assert k >= 1, k
+    t = k + 1
+
+    def segment(params, draft_params, cache, draft_cache,
+                state: SlotState):
+        b = state.positions.shape[0]
+        arange_t = jnp.arange(t, dtype=jnp.int32)
+        barange = jnp.arange(b)
+
+        def round_body(carry, _):
+            (toks, cache, dcache, pos, keys, remaining, alive,
+             accepted, proposed) = carry
+            if plain:
+                draft_keys = verify_keys = None
+            else:
+                both = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys)
+                keys, round_keys = both[:, 0], both[:, 1]
+                sub = jax.vmap(
+                    lambda kk: jax.random.split(kk, 2))(round_keys)
+                draft_keys, verify_keys = sub[:, 0], sub[:, 1]
+
+            # ---- 1. draft: k proposal steps + one sample-free absorb
+            def draft_body(dc, j):
+                dcache_j, dtoks = dc
+                lg, dcache_j = draft_model.decode_step(
+                    draft_cfg, draft_params, dcache_j, dtoks,
+                    positions=pos + j, write_mask=alive)
+                if plain:
+                    nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+                else:
+                    dkj = jax.vmap(
+                        lambda kk: jax.random.fold_in(kk, j))(draft_keys)
+                    nxt = ops.sample_tokens(lg[:, -1], state.sampling,
+                                            dkj, vocab=cfg.vocab)
+                nxt = jnp.where(alive, nxt, dtoks[:, 0])
+                snap = {key: dcache_j[key] for key in dcache_j
+                        if key.startswith(("conv", "ssm"))}
+                return (dcache_j, nxt[:, None]), \
+                    (dtoks[:, 0], lg[:, -1], snap)
+
+            (dcache, last), (inputs, dlogits, dsnaps) = jax.lax.scan(
+                draft_body, (dcache, toks), jnp.arange(k))
+            # inputs (k, B): I_0 = current token, I_j = g_{j-1};
+            # dlogits[j] = p_j, the proposal distribution of g_j.
+            # The absorb step folds the final proposal g_{k-1} into the
+            # draft's own state (so a fully-accepted round leaves the
+            # draft cache consistent) — its logits feed nothing, so it
+            # skips the sampling epilogue entirely.
+            _, dcache = draft_model.decode_step(
+                draft_cfg, draft_params, dcache, last,
+                positions=pos + k, write_mask=alive)
+            absorb = {key: dcache[key][None] for key in dcache
+                      if key.startswith(("conv", "ssm"))}
+            dsnaps = {key: jnp.concatenate([dsnaps[key], absorb[key]])
+                      for key in dsnaps}                      # (T,L,B,…)
+
+            # ---- 2. verify: one batched multi-position target forward
+            ver_tokens = jnp.concatenate([inputs.T, last], axis=1)  # (B,T)
+            tlogits, cache, tsnaps = model.decode_verify(
+                cfg, params, cache, ver_tokens, pos, write_mask=alive)
+            if plain:
+                # prefix-match-vs-argmax: bitwise the greedy rows of
+                # ops.verify_tokens, with none of the filtered-
+                # distribution or Gumbel machinery
+                out = jnp.argmax(tlogits.astype(jnp.float32),
+                                 axis=-1).astype(jnp.int32)   # (B,T)
+                match = (ver_tokens[:, 1:] == out[:, :k]).astype(jnp.int32)
+                alen = jnp.sum(jnp.cumprod(match, axis=-1), axis=-1)
+            else:
+                out, alen = ops.verify_tokens(
+                    tlogits, dlogits.transpose(1, 0, 2),
+                    ver_tokens[:, 1:], state.sampling, verify_keys,
+                    vocab=cfg.vocab)
+
+            # ---- 3. emit count: budget cap + first stop-set hit
+            cand = jnp.minimum(alen + 1, remaining)
+            if plain:       # plain requires empty stop sets at dispatch
+                fh = jnp.full((b,), t, jnp.int32)
+            else:
+                hits = jnp.any(out[..., None] == state.stop[:, None, :],
+                               axis=-1)
+                fh = jnp.where(jnp.any(hits, axis=-1),
+                               jnp.argmax(hits, axis=-1), t)
+            m = jnp.where(alive, jnp.minimum(cand, fh + 1), 0)
+            emitted = arange_t[None, :] < m[:, None]          # (B, T)
+
+            # ---- 4. per-row variable advance
+            sel = jnp.maximum(m - 1, 0)
+            new_tok = jnp.take_along_axis(out, sel[:, None], axis=1)
+            new_toks = jnp.where(alive[:, None], new_tok, toks)
+            pos = pos + m
+            remaining = remaining - m
+            stop_hit = (fh < cand) & alive
+            accepted = accepted + jnp.minimum(m, alen)
+            proposed = proposed + jnp.where(alive, k, 0)
+            alive_out = alive & (remaining > 0) & ~stop_hit
+            alens_out = jnp.where(alive, alen, 0)
+
+            # ---- recurrent rollback: gather snapshot m-1 per row.
+            # snapshot j = state after absorbing inputs I_0..I_j, and the
+            # new clock demands exactly I_0..I_{m-1} absorbed.  Rows dead
+            # at round ENTRY keep their old state (freeze).
+            cache = dict(cache)
+            for key, snap in tsnaps.items():                  # (L,B,T,…)
+                rolled = snap[:, barange, sel]                # (L,B,…)
+                keep = alive.reshape((1, b) + (1,) * (rolled.ndim - 2))
+                cache[key] = jnp.where(
+                    keep, rolled.astype(cache[key].dtype), cache[key])
+            dcache = dict(dcache)
+            for key, snap in dsnaps.items():                  # (T,L,B,…)
+                rolled = jnp.moveaxis(snap[sel, :, barange], 0, 1)
+                keep = alive.reshape((1, b) + (1,) * (rolled.ndim - 2))
+                dcache[key] = jnp.where(
+                    keep, rolled.astype(dcache[key].dtype), dcache[key])
+
+            carry = (new_toks, cache, dcache, pos, keys, remaining,
+                     alive_out, accepted, proposed)
+            return carry, (out, emitted, alens_out)
+
+        carry = (state.tokens, cache, draft_cache, state.positions,
+                 state.keys, state.remaining, state.alive,
+                 state.accepted, state.proposed)
+        (toks, cache, draft_cache, pos, keys, remaining, alive,
+         accepted, proposed), (outs, emits, alens) = jax.lax.scan(
+            round_body, carry, length=rounds)
+        state = state._replace(tokens=toks, positions=pos, keys=keys,
+                               remaining=remaining, alive=alive,
+                               accepted=accepted, proposed=proposed)
+        seq = outs.transpose(1, 0, 2).reshape(b, rounds * t)
+        emit = emits.transpose(1, 0, 2).reshape(b, rounds * t)
+        return seq, emit, alens.T, state, cache, draft_cache
 
     return segment
 

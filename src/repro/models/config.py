@@ -49,6 +49,12 @@ class ArchConfig:
     # in SamplingParams.stop_tokens (the registry-level fact the serve
     # loop's per-request stop sets are seeded from)
     eos_token: int = 0
+    # default draft for speculative draft-and-verify serving (DESIGN.md
+    # §7): "self:N" slices the target's first N blocks into a truncated-
+    # layer self-draft ("self" = half the depth); any registered arch_id
+    # with the same vocabulary works too.  None disables speculative
+    # serving unless the server is handed an explicit draft.
+    draft_arch: Optional[str] = None
 
     # --- structure -------------------------------------------------------------
     enc_dec: bool = False          # whisper: encoder-decoder

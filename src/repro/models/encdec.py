@@ -289,6 +289,70 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
     return logits, out_cache
 
 
+def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
+                  tokens: jax.Array, positions: jax.Array,
+                  write_mask=None
+                  ) -> Tuple[jax.Array, Dict[str, Any], Dict[str, Any]]:
+    """Multi-position verify forward for speculative enc-dec decoding —
+    the encoder-decoder twin of `transformer.decode_verify` (DESIGN.md
+    §7).  tokens: (B, T) — current token + T-1 draft proposals per row,
+    starting at stream position positions[b].  Self-attention runs the
+    per-query chunk identity of `transformer._verify_attn`; cross-
+    attention is position-independent (every query attends the same
+    encoder rows < enc_pos[b]), so it simply repeats the one-token
+    cross read per chunk position.  There is no recurrent state, so
+    rollback is entirely the position clock's job: all T self-attn K/V
+    rows are ring-written (masked by `write_mask`) and the junk tail
+    past the accept point stays invisible (snaps is always empty).
+
+    Returns (logits (B, T, V), cache, {})."""
+    from repro.core.backstream import decode_attention_combined
+    x = jnp.take(params["embed"], tokens, axis=0)             # (B,T,D)
+    b, t, _ = x.shape
+    pos = jnp.asarray(positions, jnp.int32)
+    cross_pos = jnp.asarray(cache["enc_pos"], jnp.int32) - 1
+
+    cache_keys = sorted(k for k in cache if k not in ("pos", "enc_pos"))
+    xs_cache = {k: cache[k] for k in cache_keys}
+
+    def scan_body(x, inp):
+        bp, cross_p, blk_cache = inp
+        updates = {}
+        for pos_i, kind in enumerate(cfg.block_pattern):
+            p = bp[pos_i]
+            x, knew, vnew = T._verify_attn(
+                cfg, p["attn"], x, kind,
+                blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos)
+            updates[f"knew{pos_i}"] = knew                    # (B,T,KH,hd)
+            updates[f"vnew{pos_i}"] = vnew
+            hx = L.rms_norm(x, cross_p["ln"], cfg.norm_eps)
+            q = (hx @ cross_p["wq"]).reshape(b, t, cfg.n_heads,
+                                             cfg.head_dim_)
+            outs = [decode_attention_combined(
+                q[:, j:j + 1], blk_cache["cross_k"], blk_cache["cross_v"],
+                cross_pos, n_chunks=1) for j in range(t)]
+            o = jnp.concatenate(outs, axis=1)
+            x = x + o.reshape(b, t, -1) @ cross_p["wo"]
+            x, _ = T.ffn_layer(cfg, p["ffn"], x, False)
+        return x, updates
+
+    x, ys = lax.scan(
+        scan_body, x, (params["dec_blocks"], params["cross"], xs_cache))
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+
+    out_cache: Dict[str, Any] = {"pos": cache["pos"] + t,
+                                 "cross_k": cache["cross_k"],
+                                 "cross_v": cache["cross_v"],
+                                 "enc_pos": cache["enc_pos"]}
+    for pos_i in range(len(cfg.block_pattern)):
+        out_cache[f"k{pos_i}"] = T.verify_kv_update(
+            cache[f"k{pos_i}"], ys[f"knew{pos_i}"], pos, write_mask)
+        out_cache[f"v{pos_i}"] = T.verify_kv_update(
+            cache[f"v{pos_i}"], ys[f"vnew{pos_i}"], pos, write_mask)
+    return constrain(logits, "logits"), out_cache, {}
+
+
 def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
                 tokens: jax.Array,
                 positions=None,

@@ -15,6 +15,10 @@ class ModelFns(NamedTuple):
     init_cache: Callable
     abstract_cache: Callable
     decode_step: Callable      # (cfg, params, cache, tokens) -> (logits, cache)
+    # (cfg, params, cache, tokens (B,T), positions, write_mask) ->
+    # (logits (B,T,V), cache, recurrent rollback snapshots) — the
+    # speculative multi-position verify forward (DESIGN.md §7)
+    decode_verify: Callable
 
 
 def get_model(cfg: ArchConfig) -> ModelFns:
@@ -22,8 +26,9 @@ def get_model(cfg: ArchConfig) -> ModelFns:
         return ModelFns(
             encdec.init_params, encdec.abstract_params, encdec.loss_fn,
             encdec.logits_fn, encdec.init_cache, encdec.abstract_cache,
-            encdec.decode_step)
+            encdec.decode_step, encdec.decode_verify)
     return ModelFns(
         transformer.init_params, transformer.abstract_params,
         transformer.loss_fn, transformer.logits_fn, transformer.init_cache,
-        transformer.abstract_cache, transformer.decode_step)
+        transformer.abstract_cache, transformer.decode_step,
+        transformer.decode_verify)

@@ -462,6 +462,191 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     return constrain(logits, "logits"), out_cache
 
 
+def _verify_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
+                 k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array,
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """T-position attention for the speculative verify forward
+    (DESIGN.md §7): x is (B, T, D) — the current token plus T-1 draft
+    tokens, row b's chunk starting at stream position pos[b].
+
+    Per query j this reproduces `_decode_attn` for a sequential decode
+    at position pos + j EXACTLY: the chunk's new K/V rows are scattered
+    into a local copy of the cache at ring slots pos..pos+T-1 first (the
+    same cast-to-cache-dtype the sequential ring write performs), query
+    j reads it under the validity clock `slot <= pos + j - 1` — so of
+    the freshly scattered rows it sees precisely the j that precede it —
+    and its own K/V contribution arrives as the merged extra partial,
+    exactly as the sequential path's not-yet-written current token does.
+    Masked slots contribute exp(-inf) = 0 to the softmax statistics, so
+    the per-query reduction is bit-identical to the one-token step, which
+    is what makes greedy speculative streams bitwise-equal to the
+    non-speculative loop (asserted in tests/test_speculative.py).
+
+    Returns (x, k_new, v_new) with k_new/v_new (B, T, KH, hd) — the
+    caller ring-writes them outside the layer scan (§Perf iteration D5
+    discipline, as in decode_step)."""
+    from repro.core.backstream import decode_attention_combined
+    b, t, _ = x.shape
+    s = k_cache.shape[2]
+    positions = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None]
+    q, k_new, v_new = _qkv(cfg, p, x, positions)
+    slots = positions % s                                     # (B,T)
+    bidx = jnp.arange(b)[:, None]
+    # advanced-index scatter: (bidx, slots) broadcast to (B,T), so the
+    # target slice is (B,T,KH,hd) — k_new/v_new's native layout
+    kc = k_cache.at[bidx, :, slots, :].set(k_new.astype(k_cache.dtype))
+    vc = v_cache.at[bidx, :, slots, :].set(v_new.astype(v_cache.dtype))
+    window = cfg.sliding_window if kind == "local" else 0
+    outs = []
+    for j in range(t):
+        extra = L.single_kv_partial(q[:, j:j + 1], k_new[:, j:j + 1],
+                                    v_new[:, j:j + 1])
+        outs.append(decode_attention_combined(
+            q[:, j:j + 1], kc, vc, pos + j - 1,
+            window=max(0, window - 1), extra=extra))
+    o = jnp.concatenate(outs, axis=1)                         # (B,T,H,hd)
+    o = o.reshape(b, t, cfg.n_heads * cfg.head_dim_)
+    return x + o @ p["wo"], k_new, v_new
+
+
+def _verify_mamba(cfg: ArchConfig, p: Params, x: jax.Array,
+                  conv_state: jax.Array, ssm_state: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """T sequential mamba decode micro-steps fused into one sublayer
+    application (the recurrence itself cannot be parallelized bitwise,
+    so it runs as a T-step scan of the exact `ssd_decode_step` /
+    conv-window math of `_decode_mamba`).  Unlike a KV slot, a recurrent
+    state has no validity clock to hide junk behind, so EVERY
+    intermediate state is returned for the segment's accept-point
+    rollback (DESIGN.md §7: rollback-as-gather): snapshot j is the state
+    after absorbing chunk inputs 0..j.
+
+    x: (B, T, D).  Returns (x_out, conv_snaps (B, T, W-1, d_inner),
+    ssm_snaps (B, T, NH, P, N) f32)."""
+    b, t, _ = x.shape
+    nh, hp, width = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.conv_width
+    z, xin, Bm, Cm, dt, A = _mamba_proj(cfg, p, x)
+    xc, _ = L.causal_conv1d(xin, p["conv_w"], conv_state)
+    # conv state after step j = the width-1 input window ending at j
+    xp = jnp.concatenate([conv_state.astype(xin.dtype), xin], axis=1)
+    conv_snaps = jnp.stack(
+        [xp[:, j + 1: j + width] for j in range(t)], axis=1)
+
+    def step(state, inp):
+        xct, dtt, Bt, Ct = inp
+        y, state = L.ssd_decode_step(state, xct.reshape(b, nh, hp),
+                                     dtt, A, Bt, Ct)
+        return state, (y, state)
+
+    _, (ys, states) = lax.scan(
+        step, ssm_state,
+        (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+         Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3)                              # (B,T,NH,P)
+    ssm_snaps = states.transpose(1, 0, 2, 3, 4)               # (B,T,NH,P,N)
+    y = y + (xc.reshape(b, t, nh, hp)
+             * p["D"][None, None, :, None].astype(xc.dtype))
+    y = (y.reshape(b, t, -1) * z).astype(x.dtype)
+    return x + y @ p["out_proj"], conv_snaps, ssm_snaps
+
+
+def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
+                  tokens: jax.Array, positions: jax.Array,
+                  write_mask: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, Dict[str, Any], Dict[str, Any]]:
+    """Multi-position verify forward of speculative decoding (DESIGN.md
+    §7): ONE batched forward over tokens (B, T) — row b's current token
+    followed by T-1 draft proposals, starting at stream position
+    positions[b] — returning logits at ALL T positions, each bitwise
+    what a sequential `decode_step` at that position would have produced
+    (per-position attention identity: see `_verify_attn`; the recurrent
+    sublayers run their exact per-token micro-steps inside the fused
+    application: `_verify_mamba`).
+
+    Cache discipline (the rollback-as-masked-write invariant):
+
+      * attention K/V — ALL T rows are ring-written (slots pos..pos+T-1)
+        for rows where `write_mask` is True; the segment then advances
+        each row's position clock by only the ACCEPTED m <= T tokens, so
+        the junk tail rows sit at slots >= the new clock and are
+        invisible until genuinely decoded tokens overwrite them (the
+        same junk-beyond-clock argument that legitimizes padded-prompt
+        prefill under the per-row clocks of the segment protocol,
+        DESIGN.md §3).  Masked (dead) rows re-write their old values,
+        token-sized gather+select as in `masked_kv_update` (the §6
+        termination-freeze discipline, extended to T rows).
+      * recurrent (conv, ssm) state — returned UNTOUCHED in the cache;
+        every intermediate state is returned in `snaps` (leaf shapes
+        (L, B, T, …)) and the segment gathers snapshot m-1 per row —
+        rollback is a gather, never a recompute.
+
+    Returns (logits (B, T, V), cache, snaps)."""
+    x = jnp.take(params["embed"], tokens, axis=0)             # (B,T,D)
+    pos = jnp.asarray(positions, jnp.int32)
+    b, t, _ = x.shape
+
+    cache_keys = sorted(k for k in cache if k != "pos")
+    xs = {k: cache[k] for k in cache_keys}
+
+    def scan_body(x, inp):
+        block_params, blk_cache = inp
+        updates = {}
+        for pos_i, kind in enumerate(cfg.block_pattern):
+            p = block_params[pos_i]
+            if kind in ("full", "local"):
+                x, knew, vnew = _verify_attn(
+                    cfg, p["attn"], x, kind,
+                    blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos)
+                updates[f"knew{pos_i}"] = knew                # (B,T,KH,hd)
+                updates[f"vnew{pos_i}"] = vnew
+            elif kind == "mamba":
+                x, conv_s, ssm_s = _verify_mamba(
+                    cfg, p["mamba"], x,
+                    blk_cache[f"conv{pos_i}"], blk_cache[f"ssm{pos_i}"])
+                updates[f"conv{pos_i}"] = conv_s              # (B,T,W-1,di)
+                updates[f"ssm{pos_i}"] = ssm_s                # (B,T,NH,P,N)
+            if cfg.d_ff > 0:
+                x, _ = ffn_layer(cfg, p["ffn"], x, _is_moe_pos(cfg, pos_i))
+        return x, updates
+
+    x, ys = lax.scan(scan_body, x, (params["blocks"], xs))
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+
+    out_cache: Dict[str, Any] = {"pos": cache["pos"] + t}
+    snaps: Dict[str, Any] = {}
+    for pos_i, kind in enumerate(cfg.block_pattern):
+        if kind in ("full", "local"):
+            out_cache[f"k{pos_i}"] = verify_kv_update(
+                cache[f"k{pos_i}"], ys[f"knew{pos_i}"], pos, write_mask)
+            out_cache[f"v{pos_i}"] = verify_kv_update(
+                cache[f"v{pos_i}"], ys[f"vnew{pos_i}"], pos, write_mask)
+        elif kind == "mamba":
+            for key in (f"conv{pos_i}", f"ssm{pos_i}"):
+                out_cache[key] = cache[key]
+                snaps[key] = ys[key]                          # (L,B,T,…)
+    return constrain(logits, "logits"), out_cache, snaps
+
+
+def verify_kv_update(cache: jax.Array, new: jax.Array, pos: jax.Array,
+                     write_mask: Optional[jax.Array]) -> jax.Array:
+    """Ring-write T consecutive per-row K/V rows into a stacked cache —
+    the T-token generalization of `cache_update_stacked` +
+    `masked_kv_update`.  cache: (L,B,KH,S,hd); new: (L,B,T,KH,hd)
+    (layer-scan ys layout); pos: (B,) slot of row 0; write_mask: (B,)
+    bool or None — masked rows re-write their old values (token-sized
+    gather+select, never a full-cache where)."""
+    l, b, kh, s, hd = cache.shape
+    t = new.shape[2]
+    slots = (pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None]) % s
+    bidx = jnp.arange(b)[:, None]
+    val = new.astype(cache.dtype).transpose(1, 2, 0, 3, 4)    # (B,T,L,KH,hd)
+    if write_mask is not None:
+        old = cache[:, bidx, :, slots, :]                     # (B,T,L,KH,hd)
+        val = jnp.where(write_mask[:, None, None, None, None], val, old)
+    return cache.at[:, bidx, :, slots, :].set(val)
+
+
 def masked_kv_update(cache: jax.Array, new: jax.Array, slot_b: jax.Array,
                      write_mask: jax.Array) -> jax.Array:
     """Replace masked-out rows of a stacked one-token K/V update with the

@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Docs-freshness check: every `DESIGN.md §N[.M]` anchor cited by a code
+comment, docstring, test or benchmark must exist as a section heading in
+DESIGN.md — so refactors cannot silently orphan the section numbers the
+code cross-references (the docs are the system of record; CI runs this).
+
+Exit 0 when every cited anchor resolves, 1 otherwise (listing the
+orphans and where they are cited).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "docs", "tools")
+# DESIGN.md §6, DESIGN.md §6.1, and bare §N citations inside DESIGN.md
+# links from markdown ("DESIGN.md §3/§6/§7" counts each)
+CITE = re.compile(r"DESIGN\.md\s+§([0-9]+(?:\.[0-9]+)?)")
+CITE_EXTRA = re.compile(r"§([0-9]+(?:\.[0-9]+)?)")
+HEADING = re.compile(r"^#{2,3}\s+§([0-9]+(?:\.[0-9]+)?)\b", re.M)
+
+
+def cited_anchors():
+    """{anchor: [file:line, ...]} across the scanned trees + README."""
+    cites: dict = {}
+    files = [ROOT / "README.md"]
+    for d in SCAN_DIRS:
+        files += sorted((ROOT / d).rglob("*.py"))
+        files += sorted((ROOT / d).rglob("*.md"))
+    for path in files:
+        if not path.exists():
+            continue
+        for lineno, line in enumerate(
+                path.read_text(errors="replace").splitlines(), 1):
+            hits = CITE.findall(line)
+            if "DESIGN.md" in line:
+                # "DESIGN.md §3/§6/§7" cites three anchors, not one
+                hits = CITE_EXTRA.findall(line)
+            for anchor in hits:
+                cites.setdefault(anchor, []).append(
+                    f"{path.relative_to(ROOT)}:{lineno}")
+    return cites
+
+
+def main() -> int:
+    design = (ROOT / "DESIGN.md").read_text()
+    have = set(HEADING.findall(design))
+    # §N.M headings imply §N exists too; and citing §N is satisfied by
+    # a §N heading only (citing §6.1 needs the §6.1 heading itself)
+    cites = cited_anchors()
+    missing = {a: where for a, where in sorted(cites.items())
+               if a not in have}
+    if missing:
+        print("DESIGN.md is missing section anchors cited by the code:")
+        for anchor, where in missing.items():
+            locs = ", ".join(where[:5])
+            more = f" (+{len(where) - 5} more)" if len(where) > 5 else ""
+            print(f"  §{anchor}  cited at {locs}{more}")
+        return 1
+    print(f"docs anchors OK: {len(cites)} cited sections "
+          f"({', '.join('§' + a for a in sorted(cites))}) "
+          f"all present in DESIGN.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
