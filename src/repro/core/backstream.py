@@ -13,23 +13,35 @@ TPU mesh the analogue (DESIGN.md SS2) is:
   RP    - fully serialized per-chunk round trips (modeled for benchmarks;
           never a sensible TPU schedule).
 
-Two entry points:
+Entry points:
   * stream_offload(...)            - generic producer->consumer combinator.
   * decode_attention_combined(...) - the LLM-serving instantiation: flash-
     decoding over a sequence-sharded KV cache, with partial-attention
     (acc, m, l) statistics merged under the selected protocol.
+  * stream_offload_to_host(...) / stream_offload_to_device(...) - the
+    HOST-TIER instantiation (DESIGN.md §8): chunked async device->host
+    eviction and host->device restore of per-slot cache pages, the
+    producer-initiated schedule of `stream_offload` realized over the
+    PCIe/CXL boundary instead of the mesh — each chunk's transfer is in
+    flight while the serve loop's decode segments keep computing, so a
+    restore hides behind decode exactly as the paper hides back-streamed
+    results behind CCM compute.  `HostTier` and `PrefixCache` are the
+    host-side stores those transfers feed: evicted slot snapshots and
+    the prompt-prefix hash-trie.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import enum
 import functools
 import threading
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
@@ -414,3 +426,226 @@ def _axle_ring_decode(q, k_cache, v_cache, kv_valid, mesh, axis, batch_axes,
         out_specs=P(batch_axes, None, None, None),
         check_rep=False,
     )(q, k_cache, v_cache, kv_valid, *extra_args)
+
+
+# --------------------------------------------------------------------------
+# Host tier: chunked device<->host page streaming + host-side stores (§8)
+# --------------------------------------------------------------------------
+#
+# The serve loop's host-tier cache manager treats host RAM as the CCM
+# expanded-memory tier and the device cache as the hot tier.  Per-slot
+# cache pages (models.*.extract_slot_cache leaves) move between the two
+# through the chunked entry points below — the host-boundary analogue of
+# `stream_offload`'s producer-initiated schedule:
+#
+#   eviction (device -> host): each chunk is sliced off the page and its
+#     `copy_to_host_async` issued immediately — all chunks are in flight
+#     while the in-flight decode segment still computes; the host only
+#     BLOCKS when it materializes the snapshot (and by then the copies
+#     have long drained behind the segment).
+#   restore (host -> device): each chunk is `device_put` (async in jax —
+#     the call returns before the transfer completes) and the page is
+#     reassembled by a device-side concatenate, so a restore dispatches
+#     without a single host sync and hides behind whatever segment is in
+#     flight — measured by the `stream.restore` benchmark rows, whose
+#     syncs/token must not move vs a no-offload baseline.
+
+def _chunk_starts(n: int, chunks: int) -> List[Tuple[int, int]]:
+    """Split [0, n) into <= `chunks` contiguous spans (last one ragged)."""
+    chunks = max(1, min(chunks, n))
+    step = -(-n // chunks)
+    return [(i, min(i + step, n)) for i in range(0, n, step)]
+
+
+class HostSnapshot:
+    """One slot's cache pages in flight to (or resident in) host RAM.
+
+    Construction slices every leaf into chunks along its leading (layer)
+    axis and starts their async host copies; `materialize()` assembles
+    the numpy leaves (blocking only on whatever hasn't drained yet) and
+    caches the result.  `nbytes` comes from shapes alone — LRU byte
+    accounting never forces a transfer."""
+
+    def __init__(self, chunks_by_leaf: Dict[str, List[jax.Array]]):
+        self._chunks = chunks_by_leaf
+        self._np: Optional[Dict[str, np.ndarray]] = None
+        for parts in chunks_by_leaf.values():
+            for part in parts:
+                start = getattr(part, "copy_to_host_async", None)
+                if start is not None:
+                    start()
+
+    @property
+    def nbytes(self) -> int:
+        if self._np is not None:
+            return sum(a.nbytes for a in self._np.values())
+        return sum(p.nbytes for parts in self._chunks.values()
+                   for p in parts)
+
+    def materialize(self) -> Dict[str, np.ndarray]:
+        if self._np is None:
+            self._np = {
+                key: (np.asarray(parts[0]) if len(parts) == 1
+                      else np.concatenate([np.asarray(p) for p in parts]))
+                for key, parts in self._chunks.items()}
+            self._chunks = {}        # drop the device references
+        return self._np
+
+
+def stream_offload_to_host(leaves: Dict[str, Any], *,
+                           chunks: int = 2) -> HostSnapshot:
+    """Evict one slot's cache pages to the host tier: `chunks` async
+    copies per leaf, issued back-to-back so the transfers pipeline
+    behind in-flight device compute (the device->host half of the §8
+    protocol mapping).  Returns a lazy `HostSnapshot` — nothing blocks
+    until someone materializes it."""
+    out: Dict[str, List[jax.Array]] = {}
+    for key, leaf in leaves.items():
+        if leaf.ndim < 2 or leaf.shape[0] == 1:
+            out[key] = [leaf]
+            continue
+        out[key] = [leaf[i0:i1]
+                    for i0, i1 in _chunk_starts(leaf.shape[0], chunks)]
+    return HostSnapshot(out)
+
+
+def stream_offload_to_device(leaves: Dict[str, np.ndarray], *,
+                             chunks: int = 2) -> Dict[str, jax.Array]:
+    """Restore host-resident cache pages to the device: per-chunk async
+    `device_put` + a device-side concatenate per leaf.  The call
+    dispatches WITHOUT a host sync — the transfers and the reassembly
+    queue behind whatever decode segment is in flight, which is the
+    whole point: restore latency hides behind decode exactly as the
+    paper's back-streamed results hide behind CCM compute."""
+    out: Dict[str, jax.Array] = {}
+    for key, leaf in leaves.items():
+        if leaf.ndim < 2 or leaf.shape[0] == 1:
+            out[key] = jax.device_put(leaf)
+            continue
+        parts = [jax.device_put(leaf[i0:i1])
+                 for i0, i1 in _chunk_starts(leaf.shape[0], chunks)]
+        out[key] = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return out
+
+
+class HostTier:
+    """Host-RAM store of evicted slot snapshots, keyed by request id —
+    the expanded-memory tier the serve loop's eviction policy spills
+    cold slots into (DESIGN.md §8).  Tracks byte-level wire accounting
+    for the benchmark rows; capacity is the host's problem (the paper's
+    premise is that this tier is the big one)."""
+
+    def __init__(self) -> None:
+        self._store: Dict[int, Tuple[HostSnapshot, Dict[str, Any]]] = {}
+        self.bytes_evicted = 0
+        self.bytes_restored = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def put(self, rid: int, pages: HostSnapshot,
+            state: Dict[str, Any]) -> None:
+        assert rid not in self._store, rid
+        self._store[rid] = (pages, state)
+        self.bytes_evicted += pages.nbytes
+
+    def pop(self, rid: int) -> Tuple[HostSnapshot, Dict[str, Any]]:
+        pages, state = self._store.pop(rid)
+        self.bytes_restored += pages.nbytes
+        return pages, state
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(p.nbytes for p, _ in self._store.values())
+
+
+class _TrieNode:
+    __slots__ = ("children", "entry")
+
+    def __init__(self) -> None:
+        self.children: Dict[int, "_TrieNode"] = {}
+        self.entry: Optional["PrefixEntry"] = None
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One cached prompt prefix: `length` tokens whose host-resident
+    cache pages (KV rows [0, length) + post-prefix recurrent state +
+    the last-token logits under key 'logits') let an admission skip
+    that portion of prefill."""
+    tokens: Tuple[int, ...]
+    pages: HostSnapshot
+
+    @property
+    def length(self) -> int:
+        return len(self.tokens)
+
+
+class PrefixCache:
+    """Hash-trie of prompt prefixes -> host-resident cache pages
+    (DESIGN.md §8).  `put` stores a full prompt's pages after a prefill;
+    `lookup` returns the LONGEST stored entry that is a prefix of a new
+    prompt — a full hit (entry.length == prompt length) skips prefill
+    entirely (pages + stored last-token logits), a partial hit restores
+    the prefix pages and resume-prefills only the suffix.  Entries are
+    LRU-evicted by byte budget (`capacity_bytes`; None = unbounded).
+
+    Why the pages are exact for any continuation: causal attention KV
+    rows [0, L) depend only on tokens [0, L), and the recurrent (conv,
+    ssm) state after token L-1 is a pure function of tokens [0, L) —
+    so pages captured while serving one request are bitwise the pages
+    any other request with the same prefix would have computed."""
+
+    def __init__(self, capacity_bytes: Optional[int] = 256 << 20) -> None:
+        self._root = _TrieNode()
+        self._lru: "collections.OrderedDict[Tuple[int, ...], PrefixEntry]" \
+            = collections.OrderedDict()
+        self.capacity_bytes = capacity_bytes
+        self.bytes_stored = 0
+        self.entries_evicted = 0
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def put(self, tokens, pages: HostSnapshot) -> None:
+        key = tuple(int(t) for t in tokens)
+        if key in self._lru:               # refresh recency, keep pages
+            self._lru.move_to_end(key)
+            return
+        node = self._root
+        for t in key:
+            node = node.children.setdefault(t, _TrieNode())
+        entry = PrefixEntry(tokens=key, pages=pages)
+        node.entry = entry
+        self._lru[key] = entry
+        self.bytes_stored += pages.nbytes
+        while (self.capacity_bytes is not None
+               and self.bytes_stored > self.capacity_bytes
+               and self._lru):
+            old_key, old = self._lru.popitem(last=False)
+            self._remove(old_key)
+            self.bytes_stored -= old.pages.nbytes
+            self.entries_evicted += 1
+
+    def lookup(self, tokens) -> Optional[PrefixEntry]:
+        node, best = self._root, None
+        for t in tokens:
+            node = node.children.get(int(t))
+            if node is None:
+                break
+            if node.entry is not None:
+                best = node.entry
+        if best is not None:
+            self._lru.move_to_end(best.tokens)
+        return best
+
+    def _remove(self, key: Tuple[int, ...]) -> None:
+        path = [self._root]
+        for t in key:
+            path.append(path[-1].children[t])
+        path[-1].entry = None
+        for depth in range(len(key), 0, -1):   # prune empty branches
+            node = path[depth]
+            if node.entry is not None or node.children:
+                break
+            del path[depth - 1].children[key[depth - 1]]

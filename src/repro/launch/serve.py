@@ -50,6 +50,23 @@ cross-attention K/V (encdec.prefill_into_cache).  The old last-token
 seeding — which dropped every other prompt token's KV and pinned all
 rows to a scalar position clock — is gone.
 
+Host-tier cache offload (`host_offload=True`, DESIGN.md §8) makes the
+resident set larger than the slot count: when demand exceeds free slots,
+cold slots' cache pages (every leaf kind — KV, conv tail, SSD state,
+enc-dec cross-KV + enc_pos) and SlotState row are evicted to host RAM
+through chunked async copies (`backstream.stream_offload_to_host`) and
+restored on demand through async `device_put` chains that dispatch with
+ZERO host syncs — a restore hides behind the in-flight decode segment
+exactly as the paper hides back-streamed results behind CCM compute, so
+decode syncs/token is unchanged vs a never-evicting server and the
+restored stream is bitwise-identical to a never-evicted one (the PRNG
+chain head, position clock and budget ride the snapshot).  Layered on
+top, `prefix_cache=True` keeps a host-side hash-trie of served prompts:
+an admission whose prompt extends a cached prefix restores those pages
+instead of recomputing them — a full hit skips the prefill forward
+entirely (first token sampled from the stored last-prefix logits), a
+partial hit runs only the suffix through `resume_prefill_into_cache`.
+
 Speculative decoding (`spec=True`, DESIGN.md §7) layers draft-and-verify
 on top of the streamed segments: a cheap draft model (a truncated-layer
 self-draft sliced from the target's own blocks, or any registered arch
@@ -76,8 +93,9 @@ import numpy as np
 
 from repro import sharding as sh
 from repro.configs import get_config, get_smoke_config
-from repro.core.backstream import (OffloadConfig, OffloadProtocol,
-                                   use_offload)
+from repro.core.backstream import (HostTier, OffloadConfig, OffloadProtocol,
+                                   PrefixCache, stream_offload_to_device,
+                                   stream_offload_to_host, use_offload)
 from repro.kernels import ops
 from repro.launch import steps as steps_lib
 from repro.models import transformer
@@ -158,6 +176,10 @@ class Request:
     generated: Optional[List[int]] = None
     spec_accepted: Optional[int] = None
     spec_proposed: Optional[int] = None
+    # host-tier offload (DESIGN.md §8): how many times this request's
+    # slot was evicted to host RAM and later restored — the stream stays
+    # bitwise-identical regardless (asserted in tests/test_cache_offload)
+    suspensions: int = 0
 
 
 def _prefill_bucket(n: int, cap: int) -> int:
@@ -245,7 +267,9 @@ class BatchedServer:
                  protocol: str = "axle", chunks_per_shard: int = 1,
                  mesh=None, seg_len: int = 8, stream: bool = False,
                  spec: bool = False, spec_k: int = 3,
-                 draft_arch: Optional[str] = None):
+                 draft_arch: Optional[str] = None,
+                 host_offload: bool = False, prefix_cache: bool = False,
+                 evict_after: int = 1, offload_chunks: int = 2):
         self.cfg = (get_smoke_config(arch_id) if smoke
                     else get_config(arch_id))
         self.model = get_model(self.cfg)
@@ -344,9 +368,74 @@ class BatchedServer:
         # to last-token seeding.
         assert transformer.supports_prefill_into_cache(self.cfg), \
             self.cfg.arch_id
-        self.prefill_fn = jax.jit(
-            steps_lib.make_prefill_into_cache(self.cfg),
-            donate_argnums=(1,))
+        # enc-dec admission computes the encoder output ONCE and feeds it
+        # to every prefill that needs it (target + speculative draft) —
+        # the double-encode fix: a self-draft shares the encoder params
+        # by reference, so one `encode` pass is bitwise what each prefill
+        # would have recomputed per-admission.
+        self.encode_fn = None
+        if self.cfg.enc_dec:
+            from repro.models import encdec
+
+            def _encode(params, enc_embeds):
+                return encdec.encode(self.cfg, params, enc_embeds,
+                                     remat=False)
+
+            self.encode_fn = jax.jit(_encode)
+            self.prefill_fn = jax.jit(
+                steps_lib.make_prefill_into_cache(self.cfg,
+                                                  from_enc_out=True),
+                donate_argnums=(1,))
+        else:
+            self.prefill_fn = jax.jit(
+                steps_lib.make_prefill_into_cache(self.cfg),
+                donate_argnums=(1,))
+        self.encoder_passes = 0
+        # the draft shares the one encoder pass only when its encoder IS
+        # the target's (self-draft params alias); a foreign enc-dec
+        # draft keeps its own encoder forward
+        self.draft_shares_encoder = False
+        if spec and self.cfg.enc_dec:
+            da = draft_arch or self.cfg.draft_arch
+            self.draft_shares_encoder = (da == "self"
+                                         or da.startswith("self:"))
+            if self.draft_shares_encoder:
+                self.draft_prefill_fn = jax.jit(
+                    steps_lib.make_prefill_into_cache(self.draft_cfg,
+                                                      from_enc_out=True),
+                    donate_argnums=(1,))
+        # ---- host-tier cache offload + prefix reuse (DESIGN.md §8) ----
+        self.host_offload = host_offload
+        self.evict_after = max(1, evict_after)
+        self.offload_chunks = offload_chunks
+        assert not (host_offload and spec), \
+            "host-tier offload under speculative serving is a ROADMAP item"
+        assert not (prefix_cache and spec), \
+            "prefix reuse under speculative serving is a ROADMAP item"
+        assert not (prefix_cache and self.cfg.enc_dec), \
+            "enc-dec prompts are keyed on audio frames, not token prefixes"
+        self.host_tier = HostTier() if host_offload else None
+        self.prefix = PrefixCache() if prefix_cache else None
+        self.suspended: List[Request] = []
+        self.slot_age = np.zeros((batch_slots,), np.int64)
+        if host_offload or prefix_cache:
+            extract, insert = steps_lib.make_slot_page_fns(self.cfg)
+            # `upto` is a shape (KV page width) — static; `row` traces
+            self.extract_fn = jax.jit(extract, static_argnums=(2,))
+            self.insert_fn = jax.jit(insert, donate_argnums=(0,))
+            resume = steps_lib.make_resume_prefill(self.cfg)
+            self.resume_fn = (jax.jit(resume, donate_argnums=(1,))
+                              if resume is not None else None)
+        self.evictions = 0
+        self.restores = 0
+        self.restored_dead = 0         # evicted rows that died in flight
+        self.prefix_hits_full = 0
+        self.prefix_hits_partial = 0
+        self.prefix_misses = 0
+        self.prefill_tokens_skipped = 0
+        self.prefill_forwards = 0
+        self.evict_dispatch_time = 0.0
+        self.restore_dispatch_time = 0.0
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * batch_slots
         # host mirrors of the device SlotState, for dispatch-time budget
@@ -390,22 +479,193 @@ class BatchedServer:
                                np.float32)
             e, d = emb.shape
             assert e <= self.cfg.enc_len and d == self.cfg.d_model, emb.shape
-            args = (jnp.asarray(emb)[None],)
         with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
+            if self.cfg.enc_dec:
+                # ONE encoder pass per admission, shared by every prefill
+                # below (the double-encode fix; tests/test_cache_offload
+                # asserts encoder_passes == admissions under spec)
+                enc_out = self.encode_fn(self.params, jnp.asarray(emb)[None])
+                self.encoder_passes += 1
+                args = (enc_out,)
             logits, self.cache = self.prefill_fn(
                 self.params, self.cache, jnp.asarray(padded), slot, plen,
                 *args)
+            self.prefill_forwards += 1
             if self.spec:
                 # the draft keeps its OWN prompt state per slot — same
                 # prefill machinery against the (sliced or separate)
                 # draft parameters; its last-token logits are discarded
                 # (the first token is always sampled from the TARGET).
-                # Known admission-cost gap: for enc-dec self-drafts this
-                # re-runs the shared encoder (ROADMAP open item).
+                # A self-draft reuses the target's enc_out (it shares the
+                # encoder params by reference — bitwise the same pass);
+                # only a FOREIGN enc-dec draft runs its own encoder.
+                draft_args = args
+                if self.cfg.enc_dec and not self.draft_shares_encoder:
+                    draft_args = (jnp.asarray(emb)[None],)
+                    self.encoder_passes += 1
                 _, self.draft_cache = self.draft_prefill_fn(
                     self.draft_params, self.draft_cache,
-                    jnp.asarray(padded), slot, plen, *args)
+                    jnp.asarray(padded), slot, plen, *draft_args)
         return logits
+
+    # -- prefix-cache reuse (DESIGN.md §8) ---------------------------------
+
+    def _admit_prefill(self, slot: int, req: Request) -> jax.Array:
+        """Prompt admission through the prefix cache: serve the longest
+        cached prefix of `req.prompt` from host-resident pages before
+        spending any prefill compute.
+
+          full hit    — the whole prompt is cached: restore its pages
+                        into the slot row and return the STORED last-
+                        token logits; zero forward passes (the skip the
+                        prefix cache exists to buy).  Bitwise-identical
+                        to a fresh prefill: same prompt means same
+                        bucket, and the pages/logits were captured from
+                        exactly that jitted prefill.
+          partial hit — restore the prefix pages, then run ONLY the
+                        suffix through the jitted resume-prefill
+                        (token-equal to a full prefill; see
+                        transformer.resume_prefill_into_cache).  Falls
+                        back to a miss when the bucketed suffix would
+                        overflow max_seq (a clamped dynamic_update_slice
+                        would silently shift the KV writes).
+          miss        — full prefill, then PUT this prompt's pages (+
+                        last-token logits, riding the page dict under
+                        'logits') so the next sharer hits."""
+        if self.prefix is None:
+            return self._prefill(slot, req)
+        plen = len(req.prompt)
+        hit = self.prefix.lookup(req.prompt)
+        if hit is not None and hit.length == plen:
+            pages = dict(hit.pages.materialize())
+            logits = jnp.asarray(pages.pop("logits"))
+            dev = stream_offload_to_device(pages, chunks=self.offload_chunks)
+            with self._ctx(), sh.use_rules(self.rules), \
+                    use_offload(self.offload):
+                self.cache = self.insert_fn(self.cache, dev, slot)
+            self.prefix_hits_full += 1
+            self.prefill_tokens_skipped += plen
+            return logits
+        if hit is not None:
+            start = hit.length
+            sbucket = _prefill_bucket(plen - start, self.max_seq)
+            if start + sbucket <= self.max_seq:
+                pages = dict(hit.pages.materialize())
+                pages.pop("logits")
+                dev = stream_offload_to_device(pages,
+                                               chunks=self.offload_chunks)
+                suffix = np.zeros((sbucket,), np.int32)
+                suffix[:plen - start] = req.prompt[start:]
+                with self._ctx(), sh.use_rules(self.rules), \
+                        use_offload(self.offload):
+                    self.cache = self.insert_fn(self.cache, dev, slot)
+                    logits, self.cache = self.resume_fn(
+                        self.params, self.cache, jnp.asarray(suffix),
+                        slot, plen, start)
+                self.prefix_hits_partial += 1
+                self.prefill_tokens_skipped += start
+                self.prefill_forwards += 1
+                self._prefix_put(slot, req, logits)
+                return logits
+        self.prefix_misses += 1
+        logits = self._prefill(slot, req)
+        self._prefix_put(slot, req, logits)
+        return logits
+
+    def _prefix_put(self, slot: int, req: Request,
+                    logits: jax.Array) -> None:
+        """Store this prompt's freshly-written slot pages in the prefix
+        trie: KV rows up to the prompt's prefill bucket (`upto` — junk
+        between plen and the bucket stays invisible under the validity
+        clock on any future restore), the post-prompt recurrent state,
+        and the last-token logits — all streamed host-ward through the
+        same chunked async copies eviction uses, so the put costs the
+        admission path no sync."""
+        bucket = _prefill_bucket(len(req.prompt), self.max_seq)
+        with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
+            pages = dict(self.extract_fn(self.cache, slot, bucket))
+        pages["logits"] = logits
+        self.prefix.put(req.prompt,
+                        stream_offload_to_host(pages,
+                                               chunks=self.offload_chunks))
+
+    # -- host-tier slot eviction / restore (DESIGN.md §8) ------------------
+
+    def suspend_slot(self, slot: int) -> None:
+        """Evict one active slot to the host tier: its cache pages (every
+        leaf kind) and its SlotState row leave as chunked async host
+        copies — the dispatch itself never blocks, so an eviction rides
+        behind whatever decode segment is in flight.  The request joins
+        the `suspended` FIFO; `_restore` brings it back when a slot
+        frees.  Correct even with an undelivered segment referencing
+        this slot: the snapshot is taken from the POST-segment device
+        arrays (data dependence), token delivery in `_consume_segment`
+        is keyed on the rows dict (not slot occupancy), and the request
+        cannot be re-admitted before that segment is consumed (consume
+        happens within one loop iteration of dispatch)."""
+        req = self.active[slot]
+        assert req is not None and not self.spec
+        t0 = time.perf_counter()
+        with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
+            pages = dict(self.extract_fn(self.cache, slot, None))
+        snap = stream_offload_to_host(pages, chunks=self.offload_chunks)
+        saved = stream_offload_to_host(
+            steps_lib.save_slot_state(self.state, slot))
+        self.host_tier.put(req.rid, snap, saved)
+        self.active[slot] = None
+        self.suspended.append(req)
+        req.suspensions += 1
+        self.evictions += 1
+        self.evict_dispatch_time += time.perf_counter() - t0
+
+    def _restore(self, slot: int, req: Request) -> bool:
+        """Re-admit a suspended request from the host tier.  The page
+        restore is pure async dispatch — per-chunk `device_put` +
+        insert, queued behind the in-flight segment with NO decode sync
+        (the bench's `stream.restore` rows assert syncs/token is
+        unchanged).  Reading the saved SlotState row back for the host
+        mirrors is the one blocking step; its async copy was issued at
+        eviction, so by restore time it has long drained (accounted like
+        an admission sync, outside `decode_syncs`).  Returns False —
+        request complete, slot still free — when the row died in its
+        final in-flight segment after eviction (its tokens were still
+        delivered; stop-regime rows only)."""
+        t0 = time.perf_counter()
+        snap, saved_snap = self.host_tier.pop(req.rid)
+        saved = saved_snap.materialize()
+        self.host_syncs += 1        # the saved-state read (was async)
+        if not bool(saved["alive"]):
+            self.restored_dead += 1
+            return False
+        pages = stream_offload_to_device(snap.materialize(),
+                                         chunks=self.offload_chunks)
+        with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
+            self.cache = self.insert_fn(self.cache, pages, slot)
+        self.state = steps_lib.restore_slot(self.state, slot, saved)
+        self.positions[slot] = int(saved["position"])
+        self.remaining[slot] = int(saved["remaining"])
+        self.slot_age[slot] = 0
+        self.restores += 1
+        self.restore_dispatch_time += time.perf_counter() - t0
+        return True
+
+    def _evict_for_demand(self) -> None:
+        """Eviction policy: when waiting requests outnumber free slots,
+        spill the coldest active rows (largest `slot_age`, i.e. most
+        segments since (re-)admission) to the host tier — but never a
+        row younger than `evict_after` segments, the quantum that keeps
+        the loop round-robin instead of thrashing."""
+        free = sum(r is None for r in self.active)
+        need = len(self.queue) + len(self.suspended) - free
+        if need <= 0:
+            return
+        eligible = sorted(
+            (s for s in range(self.batch)
+             if self.active[s] is not None
+             and self.slot_age[s] >= self.evict_after),
+            key=lambda s: -self.slot_age[s])
+        for s in eligible[:need]:
+            self.suspend_slot(s)
 
     def _admit(self, slot: int, req: Request) -> bool:
         """Prefill + first-token sampling + device state seeding for one
@@ -422,7 +682,7 @@ class BatchedServer:
             # row's final position; keep them off the valid prefix
             assert len(req.prompt) + max_new + self.spec_k <= self.max_seq, \
                 (len(req.prompt), max_new, self.spec_k, self.max_seq)
-        logits = self._prefill(slot, req)
+        logits = self._admit_prefill(slot, req)
         key, sub = jax.random.split(jax.random.PRNGKey(sp.seed))
         samp1 = ops.BatchedSampling(
             temperature=jnp.full((1,), sp.temperature, jnp.float32),
@@ -450,12 +710,36 @@ class BatchedServer:
         return True
 
     def _fill_slots(self) -> None:
-        """Admit queued requests into free slots via real prefill; all
-        device-state seeding happens inside `_admit` (steps.admit_slot)."""
+        """Admit work into free slots: restore suspended requests first
+        (FIFO — they were admitted before anything still queued), then
+        admit queued requests via real prefill.  Under host offload the
+        eviction policy runs first, so a demand surge spills cold slots
+        before admission finds them all busy.  All device-state seeding
+        happens inside `_admit` / `_restore` (steps.admit_slot /
+        steps.restore_slot)."""
+        # only requests suspended BEFORE this call are restorable: a row
+        # evicted just now may still be referenced by the undelivered
+        # in-flight segment — restoring it this early would double-count
+        # that segment's position advance in the host mirrors (the next
+        # fill runs after that segment is consumed, so one-fill deferral
+        # is exactly the safety margin needed)
+        restorable = len(self.suspended)
+        if self.host_tier is not None:
+            self._evict_for_demand()
         for s in range(self.batch):
-            if self.active[s] is None and self.queue:
+            if self.active[s] is not None:
+                continue
+            if restorable > 0 and self.suspended:
+                restorable -= 1
+                req = self.suspended.pop(0)
+                if self._restore(s, req):
+                    self.active[s] = req
+                else:
+                    self.completed.append(req)   # died while evicted
+            elif self.queue:
                 req = self.queue.pop(0)
                 self.active[s] = req
+                self.slot_age[s] = 0
                 if not self._admit(s, req):
                     self.completed.append(req)
                     self.active[s] = None
@@ -488,6 +772,7 @@ class BatchedServer:
             req = self.active[s]
             if req is None:
                 continue
+            self.slot_age[s] += 1       # segments since (re-)admission
             sp = req.sampling or GREEDY
             if self.spec:
                 # the `plain` flag still gates the greedy fast-path
@@ -589,7 +874,8 @@ class BatchedServer:
                 continue
             if self.steps >= max_steps:
                 return          # step cap: remaining requests stay active
-            if not self.queue and all(r is None for r in self.active):
+            if not self.queue and not self.suspended \
+                    and all(r is None for r in self.active):
                 return
 
     def _consume_segment(self, seg, emit, state, rows,
@@ -652,7 +938,8 @@ class BatchedServer:
         if self.stream:
             self.run_stream(max_steps)
             return
-        while (self.queue or any(r is not None for r in self.active)) \
+        while (self.queue or self.suspended
+               or any(r is not None for r in self.active)) \
                 and self.steps < max_steps:
             self.step()
 
@@ -692,13 +979,28 @@ def main() -> int:
                     help="draft arch: 'self[:N]' (truncated-layer "
                          "self-draft) or a registered arch id; defaults "
                          "to the config's draft_arch")
+    ap.add_argument("--offload", action="store_true",
+                    help="host-tier cache offload: evict cold slots to "
+                         "host RAM and restore on demand (DESIGN.md §8)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="host-side prompt-prefix page reuse "
+                         "(decoder-only archs)")
+    ap.add_argument("--evict-after", type=int, default=1,
+                    help="minimum segments a slot decodes before it is "
+                         "eviction-eligible (the round-robin quantum)")
+    ap.add_argument("--offload-chunks", type=int, default=2,
+                    help="chunks per leaf for host<->device page streams")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
     server = BatchedServer(args.arch, smoke=True, batch_slots=args.slots,
                            protocol=args.protocol, stream=args.stream,
                            seg_len=args.seg_len, spec=args.spec,
-                           spec_k=args.spec_k, draft_arch=args.draft)
+                           spec_k=args.spec_k, draft_arch=args.draft,
+                           host_offload=args.offload,
+                           prefix_cache=args.prefix_cache,
+                           evict_after=args.evict_after,
+                           offload_chunks=args.offload_chunks)
     stops = (server.cfg.eos_token,) if args.stop_eos else ()
     sampled = (args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0
                or args.stop_eos)
@@ -709,6 +1011,7 @@ def main() -> int:
               "defaulting temperature to 1.0", file=sys.stderr)
         args.temperature = 1.0
     t0 = time.time()
+    first_prompt = None
     for i in range(args.requests):
         plen = int(rng.integers(4, 12))
         embeds = None
@@ -719,9 +1022,18 @@ def main() -> int:
             temperature=args.temperature, top_k=args.top_k,
             top_p=args.top_p, seed=args.seed + i,
             stop_tokens=stops) if sampled else None
-        server.submit(Request(i, rng.integers(
-            1, server.cfg.vocab, plen).astype(np.int32), args.max_new,
-            embeds=embeds, sampling=sampling))
+        prompt = rng.integers(1, server.cfg.vocab, plen).astype(np.int32)
+        if args.prefix_cache:
+            # demo workload for the prefix cache: every 3rd request repeats
+            # the first prompt (full hit), every 3rd+1 extends it (partial)
+            if first_prompt is None:
+                first_prompt = prompt
+            elif i % 3 == 1:
+                prompt = first_prompt
+            elif i % 3 == 2:
+                prompt = np.concatenate([first_prompt, prompt[:4]])
+        server.submit(Request(i, prompt, args.max_new,
+                              embeds=embeds, sampling=sampling))
     server.run_until_drained()
     dt = time.time() - t0
     toks = sum(len(r.generated) for r in server.completed)
@@ -732,10 +1044,18 @@ def main() -> int:
         rate = server.draft_accepted / max(1, server.draft_proposed)
         spec = (f" spec_k={args.spec_k} accept_rate={rate:.2f} "
                 f"tokens/sync={toks / max(1, server.decode_syncs):.2f}")
+    offl = ""
+    if args.offload:
+        offl = (f" evictions={server.evictions} restores={server.restores}"
+                f" host_mb={server.host_tier.bytes_evicted / 2**20:.1f}")
+    if args.prefix_cache:
+        hits = server.prefix_hits_full + server.prefix_hits_partial
+        offl += (f" prefix_hits={hits}/{hits + server.prefix_misses}"
+                 f" prefill_skipped={server.prefill_tokens_skipped}tok")
     print(f"[serve] protocol={args.protocol} mode={mode} "
           f"sampling={'on' if sampled else 'greedy'} "
           f"requests={len(server.completed)} tokens={toks} "
-          f"steps={server.steps} syncs/token={spt:.3f}{spec} "
+          f"steps={server.steps} syncs/token={spt:.3f}{spec}{offl} "
           f"({toks / dt:.1f} tok/s on CPU)")
     return 0
 

@@ -138,6 +138,54 @@ def admit_slot(state: SlotState, slot: int, *, token: int, position: int,
         proposed=s.proposed.at[slot].set(0))
 
 
+def save_slot_state(state: SlotState, slot) -> dict:
+    """Gather ONE slot's row of every SlotState field for host-tier
+    eviction (DESIGN.md §8) — the mid-stream counterpart of the values
+    `admit_slot` seeds.  The returned dict of device scalars/rows is
+    what `restore_slot` consumes; the PRNG `key` entry is the slot's
+    CURRENT chain head, so a restored slot resumes the exact split
+    sequence a never-evicted slot would have continued."""
+    return {
+        "token": state.tokens[slot, 0],
+        "position": state.positions[slot],
+        "key": state.keys[slot],
+        "remaining": state.remaining[slot],
+        "alive": state.alive[slot],
+        "temperature": state.sampling.temperature[slot],
+        "top_k": state.sampling.top_k[slot],
+        "top_p": state.sampling.top_p[slot],
+        "min_p": state.sampling.min_p[slot],
+        "stop": state.stop[slot],
+        "accepted": state.accepted[slot],
+        "proposed": state.proposed[slot],
+    }
+
+
+def restore_slot(state: SlotState, slot, saved: dict) -> SlotState:
+    """Re-seed one slot from a `save_slot_state` snapshot — `admit_slot`'s
+    restore twin.  Unlike admission it does NOT reset the spec counters
+    or re-derive alive from remaining: every field (position clock, PRNG
+    chain head, accepted/proposed) continues exactly where the evicted
+    slot left off, which is what makes an evicted-then-restored stream
+    bitwise-equal to a never-evicted one."""
+    s = state
+    return SlotState(
+        tokens=s.tokens.at[slot, 0].set(saved["token"]),
+        positions=s.positions.at[slot].set(saved["position"]),
+        keys=s.keys.at[slot].set(saved["key"]),
+        remaining=s.remaining.at[slot].set(saved["remaining"]),
+        alive=s.alive.at[slot].set(saved["alive"]),
+        sampling=ops.BatchedSampling(
+            temperature=s.sampling.temperature.at[slot].set(
+                saved["temperature"]),
+            top_k=s.sampling.top_k.at[slot].set(saved["top_k"]),
+            top_p=s.sampling.top_p.at[slot].set(saved["top_p"]),
+            min_p=s.sampling.min_p.at[slot].set(saved["min_p"])),
+        stop=s.stop.at[slot].set(saved["stop"]),
+        accepted=s.accepted.at[slot].set(saved["accepted"]),
+        proposed=s.proposed.at[slot].set(saved["proposed"]))
+
+
 def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, *,
                     compress_grads: bool = False):
     """(params, opt_state, comp_state, batch) ->
@@ -482,7 +530,7 @@ def make_spec_decode_segment(cfg: ArchConfig, draft_cfg: ArchConfig,
     return segment
 
 
-def make_prefill_into_cache(cfg: ArchConfig):
+def make_prefill_into_cache(cfg: ArchConfig, *, from_enc_out: bool = False):
     """Real prompt prefill into one continuous-batching slot, for EVERY
     registered architecture (attention, SSM/hybrid, encoder-decoder).
 
@@ -494,9 +542,22 @@ def make_prefill_into_cache(cfg: ArchConfig):
     enc_embeds (1, enc_len, D)) -> (last_logits (V,), cache) — runs the
     encoder on the request's frames, writes its per-layer cross-KV into
     the slot row, and prefills the decoder self-attention cache; see
-    encdec.prefill_into_cache."""
+    encdec.prefill_into_cache.  With `from_enc_out=True` the returned fn
+    takes a precomputed encoder output `enc_out (1, enc_len, D)` in
+    place of `enc_embeds`, so target and speculative-draft admission
+    share ONE encoder pass (the draft shares encoder params by
+    reference — same input, bitwise-same enc_out)."""
     if cfg.enc_dec:
         from repro.models import encdec
+
+        if from_enc_out:
+            def prefill_ed_cached(params, cache, prompt, row, length,
+                                  enc_out):
+                return encdec.prefill_into_cache(cfg, params, cache, prompt,
+                                                 row, length, None,
+                                                 enc_out=enc_out)
+
+            return prefill_ed_cached
 
         def prefill_ed(params, cache, prompt, row, length, enc_embeds):
             return encdec.prefill_into_cache(cfg, params, cache, prompt,
@@ -511,3 +572,39 @@ def make_prefill_into_cache(cfg: ArchConfig):
                                               row, length)
 
     return prefill
+
+
+def make_resume_prefill(cfg: ArchConfig):
+    """Suffix prefill from restored prefix-cache pages (DESIGN.md §8):
+    (params, cache, suffix (Ps,), row, length, start) ->
+    (last_logits (V,), cache).  Row `row` must already hold the restored
+    prefix pages (KV rows [0, start) + post-prefix recurrent state) —
+    see transformer.resume_prefill_into_cache.  Returns None for enc-dec
+    archs, where prompts are keyed on audio frames and prefix reuse is
+    undefined."""
+    model = get_model(cfg)
+    if model.resume_prefill is None:
+        return None
+
+    def resume(params, cache, suffix, row, length, start):
+        return model.resume_prefill(cfg, params, cache, suffix, row,
+                                    length, start)
+
+    return resume
+
+
+def make_slot_page_fns(cfg: ArchConfig):
+    """(extract, insert) for per-slot host-tier cache pages (§8):
+    extract(cache, row[, upto]) -> {leaf: page}, insert(cache, pages,
+    row) -> cache — thin closures over the registry's per-arch
+    extract_slot/insert_slot covering every leaf kind (KV, conv tail,
+    SSD state, enc-dec cross-KV + enc_pos)."""
+    model = get_model(cfg)
+
+    def extract(cache, row, upto=None):
+        return model.extract_slot(cfg, cache, row, upto)
+
+    def insert(cache, pages, row):
+        return model.insert_slot(cfg, cache, pages, row)
+
+    return extract, insert

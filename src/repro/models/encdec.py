@@ -209,7 +209,8 @@ def prefill_cross_cache(cfg: ArchConfig, params: Params, enc_out: jax.Array,
 def prefill_into_cache(cfg: ArchConfig, params: Params,
                        cache: Dict[str, Any], tokens: jax.Array,
                        row: jax.Array, length: jax.Array,
-                       enc_embeds: jax.Array
+                       enc_embeds: jax.Array = None, *,
+                       enc_out: jax.Array = None
                        ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Real encoder-decoder prefill of ONE request into batch row `row` —
     what takes whisper-style serving out of `BatchedServer` fallback mode.
@@ -238,10 +239,23 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
     per distinct clip length (the serving driver passes clips at their
     true length; bucket upstream if trace churn matters).
 
+    `enc_out` (keyword-only) bypasses phase 1 with a PRECOMPUTED encoder
+    output (1, e, D): speculative admission runs target AND draft
+    prefill for the same request, and a self-draft shares the encoder
+    parameters by reference — encoding twice was pure waste (the
+    ROADMAP-carried double-encode).  The serving driver encodes once
+    per admission and hands the same enc_out to both prefills; passing
+    enc_out is bitwise-identical to passing the enc_embeds it was
+    encoded from (asserted in tests/test_cache_offload.py).  Exactly
+    one of enc_embeds / enc_out must be given.
+
     Returns (last-token logits (V,), updated cache)."""
     from repro.kernels import ops
     p_len = tokens.shape[0]
-    enc_out = encode(cfg, params, enc_embeds, remat=False)  # (1, E, D)
+    assert (enc_embeds is None) != (enc_out is None), \
+        "pass exactly one of enc_embeds / enc_out"
+    if enc_out is None:
+        enc_out = encode(cfg, params, enc_embeds, remat=False)  # (1, E, D)
     e = enc_out.shape[1]
 
     x = jnp.take(params["embed"], tokens[None], axis=0)     # (1, P, D)
@@ -287,6 +301,17 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
             c, val.astype(c.dtype), (0, row, 0, 0, 0))
     out_cache["enc_pos"] = cache["enc_pos"].at[row].set(e)
     return logits, out_cache
+
+
+# Per-slot cache pages (host-tier offload, DESIGN.md §8): the generic
+# shape dispatch of the transformer versions covers every enc-dec leaf —
+# 5-dim cross_k/cross_v panels slice like KV panels (but are never
+# prefix-truncated: `upto` matches only k{pos}/v{pos} names), and the
+# 1-dim enc_pos clock slices on axis 0 — so one definition serves both
+# model families (round-trip asserted per leaf kind in
+# tests/test_cache_offload.py).
+extract_slot_cache = T.extract_slot_cache
+insert_slot_cache = T.insert_slot_cache
 
 
 def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],

@@ -1,7 +1,7 @@
 """Arch-id -> model functions dispatch (decoder-only vs encoder-decoder)."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 from repro.models import encdec, transformer
 from repro.models.config import ArchConfig
@@ -19,6 +19,15 @@ class ModelFns(NamedTuple):
     # (logits (B,T,V), cache, recurrent rollback snapshots) — the
     # speculative multi-position verify forward (DESIGN.md §7)
     decode_verify: Callable
+    # per-slot cache pages (host-tier offload, DESIGN.md §8):
+    # (cfg, cache, row[, upto]) -> leaves / (cfg, cache, leaves, row) ->
+    # cache — the evict/restore unit for every leaf kind
+    extract_slot: Callable
+    insert_slot: Callable
+    # (cfg, params, cache, suffix, row, length, start) -> (logits, cache)
+    # — suffix prefill from restored prefix pages; None where prefix
+    # reuse is undefined (enc-dec prompts are keyed on audio frames)
+    resume_prefill: Optional[Callable]
 
 
 def get_model(cfg: ArchConfig) -> ModelFns:
@@ -26,9 +35,12 @@ def get_model(cfg: ArchConfig) -> ModelFns:
         return ModelFns(
             encdec.init_params, encdec.abstract_params, encdec.loss_fn,
             encdec.logits_fn, encdec.init_cache, encdec.abstract_cache,
-            encdec.decode_step, encdec.decode_verify)
+            encdec.decode_step, encdec.decode_verify,
+            encdec.extract_slot_cache, encdec.insert_slot_cache, None)
     return ModelFns(
         transformer.init_params, transformer.abstract_params,
         transformer.loss_fn, transformer.logits_fn, transformer.init_cache,
         transformer.abstract_cache, transformer.decode_step,
-        transformer.decode_verify)
+        transformer.decode_verify, transformer.extract_slot_cache,
+        transformer.insert_slot_cache,
+        transformer.resume_prefill_into_cache)

@@ -777,3 +777,244 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
             out_cache[key] = lax.dynamic_update_slice(
                 c, upd, (0, row) + (0,) * (c.ndim - 2))
     return logits, out_cache
+
+
+# --------------------------------------------------------------------------
+# Per-slot cache pages: extract / insert (host-tier offload, DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+def _is_self_kv(key: str) -> bool:
+    """Self-attention KV leaves are named k{pos}/v{pos}; conv{pos},
+    ssm{pos}, cross_k/cross_v and enc_pos are everything else."""
+    return key[0] in ("k", "v") and key[1:].isdigit()
+
+
+def extract_slot_cache(cfg: ArchConfig, cache: Dict[str, Any],
+                       row: jax.Array, upto: Optional[int] = None
+                       ) -> Dict[str, Any]:
+    """Slice batch row `row` out of every cache leaf — ONE request's
+    cache pages, the unit the host tier evicts and the prefix cache
+    stores (DESIGN.md §8).  Covers every leaf kind by shape dispatch:
+    5-dim KV / cross-KV panels and 4-dim conv windows keep a size-1
+    batch axis at position 1; the 1-dim `enc_pos` clock is sliced on
+    axis 0; the scalar `pos` counter is per-BATCH bookkeeping of the
+    single-sequence path and is excluded (per-slot serving never reads
+    it).  `upto` (static) truncates self-attention KV leaves to their
+    first `upto` sequence rows — the prefix-page slice; by causality
+    those rows depend only on prompt tokens [0, upto), so a stored
+    prefix page is exact for ANY continuation.  `row` may be traced
+    (one jit trace serves every slot)."""
+    row = jnp.asarray(row, jnp.int32)
+    out: Dict[str, Any] = {}
+    for key, leaf in cache.items():
+        if key == "pos":
+            continue
+        if leaf.ndim == 1:                            # enc_pos (B,)
+            out[key] = lax.dynamic_slice(leaf, (row,), (1,))
+            continue
+        sizes = (leaf.shape[0], 1) + leaf.shape[2:]
+        sl = lax.dynamic_slice(
+            leaf, (0, row) + (0,) * (leaf.ndim - 2), sizes)
+        if upto is not None and _is_self_kv(key):
+            sl = sl[:, :, :, :upto]
+        out[key] = sl
+    return out
+
+
+def insert_slot_cache(cfg: ArchConfig, cache: Dict[str, Any],
+                      leaves: Dict[str, Any], row: jax.Array
+                      ) -> Dict[str, Any]:
+    """Write extracted slot pages back into batch row `row` — the
+    restore half of the evict→restore round trip.  Leaves may be the
+    full-slot extract OR a prefix-truncated KV page set (`upto` rows):
+    a short KV leaf writes rows [0, upto) and leaves the tail as the
+    previous occupant's junk, invisible under the per-row validity
+    clock until ring writes overwrite it (the same junk-beyond-clock
+    argument as padded-prompt prefill).  Inverse of
+    `extract_slot_cache` leaf-for-leaf (bitwise: pure data movement,
+    asserted in tests/test_cache_offload.py)."""
+    row = jnp.asarray(row, jnp.int32)
+    out = dict(cache)
+    for key, val in leaves.items():
+        c = cache[key]
+        val = jnp.asarray(val).astype(c.dtype)
+        if c.ndim == 1:
+            out[key] = lax.dynamic_update_slice(c, val, (row,))
+        else:
+            out[key] = lax.dynamic_update_slice(
+                c, val, (0, row) + (0,) * (c.ndim - 2))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Resume prefill: continue a prompt from restored prefix pages (§8)
+# --------------------------------------------------------------------------
+
+def _resume_attention(cfg: ArchConfig, q: jax.Array, k: jax.Array,
+                      v: jax.Array, k_row: jax.Array, v_row: jax.Array,
+                      start: jax.Array, window: int) -> jax.Array:
+    """Suffix-query attention as a two-partial softmax merge: partial A
+    reads the slot's RESTORED prefix KV rows [0, start) straight from
+    the cache page (validity `slot < start`, plus the sliding-window
+    bound under the global query positions start+t), partial B is
+    causal attention within the suffix itself.  Merging the (acc, m, l)
+    statistics reproduces full-prompt softmax attention exactly in
+    exact arithmetic — the same flash-decoding merge identity the
+    decode path rests on; in floats the reduction ORDER differs from
+    the one-pass prefill kernel, so resumed prefill is token-equal but
+    not bitwise for attention layers (mamba resume IS bitwise — the
+    recurrence continues from the exact restored state).
+
+    q: (1,T,H,hd); k/v: (1,T,KH,hd) suffix; k_row/v_row: (1,KH,S,hd)
+    restored page; start: traced prefix length.  Returns (1,T,H,hd)."""
+    b, t, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    s = k_row.shape[2]
+    qf = (q.astype(jnp.float32) * hd ** -0.5).reshape(b, t, kh, g, hd)
+    gpos = start + jnp.arange(t, dtype=jnp.int32)          # global q positions
+    slots = jnp.arange(s, dtype=jnp.int32)
+    # partial A: the restored prefix rows
+    s1 = jnp.einsum("btkgd,bksd->btkgs", qf, k_row.astype(jnp.float32))
+    valid = jnp.broadcast_to(slots[None, :] < start, (t, s))
+    if window > 0:
+        valid &= slots[None, :] > gpos[:, None] - window
+    s1 = jnp.where(valid[None, :, None, None, :], s1, L.NEG_INF)
+    m1 = jnp.max(s1, axis=-1)
+    p1 = jnp.where(valid[None, :, None, None, :],
+                   jnp.exp(s1 - m1[..., None]), 0.0)
+    l1 = jnp.sum(p1, axis=-1)
+    acc1 = jnp.einsum("btkgs,bksd->btkgd", p1, v_row.astype(jnp.float32))
+    # partial B: causal attention within the suffix (query u attends
+    # suffix keys <= u; every query attends itself, so l > 0 always)
+    s2 = jnp.einsum("btkgd,bukd->btkgu", qf, k.astype(jnp.float32))
+    tri = jnp.arange(t)
+    cmask = tri[None, :] <= tri[:, None]
+    if window > 0:
+        cmask &= tri[None, :] > tri[:, None] - window
+    s2 = jnp.where(cmask[None, :, None, None, :], s2, L.NEG_INF)
+    m2 = jnp.max(s2, axis=-1)
+    p2 = jnp.where(cmask[None, :, None, None, :],
+                   jnp.exp(s2 - m2[..., None]), 0.0)
+    l2 = jnp.sum(p2, axis=-1)
+    acc2 = jnp.einsum("btkgu,bukd->btkgd", p2, v.astype(jnp.float32))
+    m = jnp.maximum(m1, m2)
+    acc = acc1 * jnp.exp(m1 - m)[..., None] \
+        + acc2 * jnp.exp(m2 - m)[..., None]
+    l = l1 * jnp.exp(m1 - m) + l2 * jnp.exp(m2 - m)
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(b, t, h, hd).astype(q.dtype)
+
+
+def _resume_mamba(cfg: ArchConfig, p: Params, x: jax.Array,
+                  conv0: jax.Array, ssm0: jax.Array,
+                  suffix_len: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """`_prefill_mamba` continued from a restored recurrent state: the
+    causal conv runs with the restored width-1 input window as its
+    initial state and the SSD scan seeds `init_state` with the restored
+    (NH, P, N) state — on the sequential CPU oracle this is bitwise the
+    full-prompt prefill (the recurrence visits identical states).  dt is
+    zeroed past the TRUE suffix length and the new conv window is
+    sliced at it, exactly as `_prefill_mamba` masks its padded tail."""
+    from repro.kernels import ops
+    b, s, _ = x.shape
+    nh, hp, width = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.conv_width
+    z, xin, Bm, Cm, dt, A = _mamba_proj(cfg, p, x)
+    conv0 = conv0.astype(xin.dtype)
+    pad = jnp.concatenate([conv0, xin], axis=1)
+    conv_state = lax.dynamic_slice(
+        pad, (0, jnp.asarray(suffix_len, jnp.int32), 0),
+        (b, width - 1, xin.shape[-1]))
+    xc, _ = L.causal_conv1d(xin, p["conv_w"], conv0)
+    in_suffix = jnp.arange(s) < jnp.asarray(suffix_len, jnp.int32)
+    dt = jnp.where(in_suffix[None, :, None], dt, 0.0)
+    y, ssm_state = ops.ssd_scan(xc.reshape(b, s, nh, hp), dt, A, Bm, Cm,
+                                ssm0.astype(jnp.float32))
+    y = y + (xc.reshape(b, s, nh, hp)
+             * p["D"][None, None, :, None].astype(xc.dtype))
+    y = (y.reshape(b, s, -1) * z).astype(x.dtype)
+    return x + y @ p["out_proj"], conv_state, ssm_state
+
+
+def resume_prefill_into_cache(cfg: ArchConfig, params: Params,
+                              cache: Dict[str, Any], tokens: jax.Array,
+                              row: jax.Array, length: jax.Array,
+                              start: jax.Array
+                              ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Prefill ONLY the suffix of a prompt whose first `start` tokens'
+    cache pages were just restored from the host tier (prefix-cache
+    partial hit, DESIGN.md §8) — the prefill-compute skip the prefix
+    cache exists to buy.
+
+    tokens: (Ps,) padded SUFFIX tokens (prompt[start:], bucket-padded);
+    length: TRUE total prompt length (start + true suffix length);
+    start: prefix length — both traced, so one trace serves every
+    (suffix bucket) shape.  Row `row`'s cache must already hold the
+    restored pages: KV rows [0, start) and the post-prefix (conv, ssm)
+    recurrent state.  The caller guarantees start + Ps <= max_seq (a
+    clamped dynamic_update_slice would silently shift the KV writes).
+
+    Attention layers merge a restored-prefix partial with a causal
+    suffix partial (`_resume_attention` — token-equal to full prefill,
+    not bitwise); mamba layers continue the recurrence from the
+    restored state (`_resume_mamba` — bitwise on the sequential
+    oracle).  Suffix junk past `length` is handled exactly as in
+    `prefill_into_cache`: KV junk lands at slots >= length (invisible
+    under the validity clock), recurrent junk is masked out of the
+    recurrence itself.  Returns (last-token logits (V,), cache)."""
+    assert not cfg.enc_dec, \
+        "prefix resume is decoder-only (enc-dec prompts are keyed on audio)"
+    assert supports_prefill_into_cache(cfg), cfg.arch_id
+    t_len = tokens.shape[0]
+    row = jnp.asarray(row, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    suffix_len = jnp.asarray(length, jnp.int32) - start
+    x = jnp.take(params["embed"], tokens[None], axis=0)   # (1,Ps,D)
+    positions = (start + jnp.arange(t_len, dtype=jnp.int32))[None]
+    # the slot's restored pages ride the layer scan as READ-ONLY xs
+    row_cache = extract_slot_cache(cfg, cache, row)
+
+    def scan_body(x, inp):
+        block_params, blk_row = inp
+        states = {}
+        for pos_i, kind in enumerate(cfg.block_pattern):
+            p = block_params[pos_i]
+            if kind in ("full", "local"):
+                q, k, v = _qkv(cfg, p["attn"], x, positions)
+                window = cfg.sliding_window if kind == "local" else 0
+                o = _resume_attention(cfg, q, k, v, blk_row[f"k{pos_i}"],
+                                      blk_row[f"v{pos_i}"], start, window)
+                x = x + o.reshape(1, t_len, -1) @ p["attn"]["wo"]
+                states[f"k{pos_i}"] = k.transpose(0, 2, 1, 3)
+                states[f"v{pos_i}"] = v.transpose(0, 2, 1, 3)
+            elif kind == "mamba":
+                x, conv_s, ssm_s = _resume_mamba(
+                    cfg, p["mamba"], x, blk_row[f"conv{pos_i}"],
+                    blk_row[f"ssm{pos_i}"], suffix_len)
+                states[f"conv{pos_i}"] = conv_s
+                states[f"ssm{pos_i}"] = ssm_s
+            if cfg.d_ff > 0:
+                x, _ = ffn_layer(cfg, p["ffn"], x, _is_moe_pos(cfg, pos_i))
+        return x, states
+
+    x, states = lax.scan(scan_body, x, (params["blocks"], row_cache))
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    x_last = lax.dynamic_slice_in_dim(x, suffix_len - 1, 1, axis=1)
+    logits = jnp.einsum("bsd,vd->bsv", x_last, params["embed"])[0, 0]
+
+    out_cache = dict(cache)
+    for pos_i, kind in enumerate(cfg.block_pattern):
+        if kind in ("full", "local"):
+            # suffix KV rows land at sequence offset `start`
+            for key in (f"k{pos_i}", f"v{pos_i}"):
+                c = cache[key]
+                out_cache[key] = lax.dynamic_update_slice(
+                    c, states[key].astype(c.dtype), (0, row, 0, start, 0))
+        else:
+            for key in (f"conv{pos_i}", f"ssm{pos_i}"):
+                c = cache[key]
+                out_cache[key] = lax.dynamic_update_slice(
+                    c, states[key].astype(c.dtype),
+                    (0, row) + (0,) * (c.ndim - 2))
+    return logits, out_cache

@@ -1,0 +1,390 @@
+"""Host-tier cache offload (DESIGN.md §8): evict/restore round-trips,
+bitwise stream equivalence under eviction, prefix-cache reuse, and the
+enc-dec single-encoder-pass admission.
+
+Layers under test, bottom-up:
+
+  * models.*.extract_slot_cache / insert_slot_cache — one slot's cache
+    pages for EVERY leaf kind: attention KV, mamba conv tail + SSD
+    state, enc-dec cross-KV + enc_pos clock;
+  * core.backstream.stream_offload_to_host / stream_offload_to_device —
+    chunked async host<->device page streaming (bitwise round-trip for
+    any chunking);
+  * steps.save_slot_state / restore_slot — the SlotState row (position
+    clock, PRNG chain head, budget, stop set, alive bit) rides the same
+    snapshot, which is what makes restoration invisible to the stream;
+  * launch.serve.BatchedServer(host_offload=True) — an oversubscribed
+    workload whose slots are evicted mid-decode and restored on demand
+    emits EXACTLY the token streams of a never-evicting server, greedy
+    and fixed-seed stochastic alike;
+  * transformer.resume_prefill_into_cache + BatchedServer(
+    prefix_cache=True) — prompt-prefix page reuse: full hits skip the
+    prefill forward bitwise, partial hits resume-prefill the suffix;
+  * encdec.prefill_into_cache(enc_out=...) — target and speculative
+    draft admission share ONE encoder pass (the double-encode fix).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import backstream as BS
+from repro.models.registry import get_model
+
+ARCHES = ["mamba2_370m", "jamba_1_5_large", "starcoder2_3b",
+          "whisper_large_v3"]
+
+# every cache leaf kind the offload path must carry, per family
+EXPECTED_KINDS = {
+    "mamba2_370m": {"conv", "ssm"},
+    "jamba_1_5_large": {"k", "v", "conv", "ssm"},
+    "starcoder2_3b": {"k", "v"},
+    "whisper_large_v3": {"k", "v", "cross_k", "cross_v", "enc_pos"},
+}
+
+
+def _kind(key: str) -> str:
+    return key.rstrip("0123456789")
+
+
+def _filled_cache(fns, cfg, batch, max_seq, seed=1):
+    """A decode cache with random (per-dtype) contents in every leaf, so
+    a round-trip mismatch cannot hide in zeros."""
+    cache = fns.init_cache(cfg, batch, max_seq)
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for k, v in cache.items():
+        key, sub = jax.random.split(key)
+        if k == "pos":
+            out[k] = v
+        elif jnp.issubdtype(v.dtype, jnp.floating):
+            out[k] = jax.random.normal(sub, v.shape).astype(v.dtype)
+        else:
+            out[k] = jax.random.randint(sub, v.shape, 1, 7).astype(v.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHES)
+@pytest.mark.parametrize("chunks", [1, 3])
+def test_slot_page_round_trip_bitwise(arch, chunks):
+    """extract -> host (chunked async) -> device -> insert is bitwise for
+    every leaf kind, touches only the target row, and covers the
+    family's full leaf-kind set."""
+    cfg = get_smoke_config(arch)
+    fns = get_model(cfg)
+    filled = _filled_cache(fns, cfg, batch=3, max_seq=16)
+    leaves = fns.extract_slot(cfg, filled, 1, None)
+    assert {_kind(k) for k in leaves} == EXPECTED_KINDS[arch], arch
+
+    snap = BS.stream_offload_to_host(leaves, chunks=chunks)
+    assert snap.nbytes > 0
+    host = snap.materialize()
+    assert snap.nbytes == sum(a.nbytes for a in host.values())
+    restored = BS.stream_offload_to_device(host, chunks=chunks)
+
+    zero = {k: (v if k == "pos" else jnp.zeros_like(v))
+            for k, v in filled.items()}
+    back = fns.insert_slot(cfg, zero, restored, 1)
+    for k in filled:
+        if k == "pos":
+            continue
+        a, b = np.asarray(filled[k]), np.asarray(back[k])
+        if a.ndim >= 2:
+            row_a, row_b, others = a[:, 1], b[:, 1], b[:, [0, 2]]
+        else:
+            row_a, row_b, others = a[1], b[1], b[[0, 2]]
+        assert np.array_equal(row_a, row_b), (arch, k)
+        assert not others.any(), (arch, k, "wrote outside the slot row")
+
+
+@pytest.mark.parametrize("arch", ["starcoder2_3b", "whisper_large_v3"])
+def test_kv_page_upto_truncation(arch):
+    """`upto` bounds self-attention KV pages to the valid prefix (the
+    prefix-cache page width) while leaving every other leaf whole —
+    enc-dec cross-KV is keyed on frames, not prompt tokens."""
+    cfg = get_smoke_config(arch)
+    fns = get_model(cfg)
+    filled = _filled_cache(fns, cfg, batch=2, max_seq=16)
+    leaves = fns.extract_slot(cfg, filled, 0, 8)
+    for k, v in leaves.items():
+        if _kind(k) in ("k", "v"):
+            assert v.shape[3] == 8, (k, v.shape)
+            full = np.asarray(filled[k])[:, 0:1, :, :8]
+            assert np.array_equal(np.asarray(v), full), k
+        elif np.asarray(v).ndim >= 3 and _kind(k) in ("cross_k", "cross_v"):
+            assert v.shape[3] == cfg.enc_len, (k, v.shape)
+
+
+def test_slot_state_save_restore_round_trip():
+    """A SlotState row survives save -> host snapshot -> restore bitwise:
+    position clock, PRNG chain head, budget, stop set, sampling params,
+    alive bit and spec counters all continue where they left off."""
+    from repro.launch import steps as steps_lib
+    state = steps_lib.init_slot_state(3)
+    stop = jnp.asarray(np.array([5, 9, -1, -1], np.int32))
+    state = steps_lib.admit_slot(
+        state, 1, token=7, position=11, key=jax.random.PRNGKey(3),
+        remaining=6, temperature=0.7, top_k=12, top_p=0.9, min_p=0.05,
+        stop=stop)
+    saved = BS.stream_offload_to_host(
+        steps_lib.save_slot_state(state, 1)).materialize()
+    fresh = steps_lib.init_slot_state(3)
+    back = steps_lib.restore_slot(fresh, 2, saved)   # different slot
+    assert int(back.tokens[2, 0]) == 7
+    assert int(back.positions[2]) == 11
+    assert np.array_equal(np.asarray(back.keys[2]),
+                          np.asarray(state.keys[1]))
+    assert int(back.remaining[2]) == 6 and bool(back.alive[2])
+    assert float(back.sampling.temperature[2]) == pytest.approx(0.7)
+    assert int(back.sampling.top_k[2]) == 12
+    assert np.array_equal(np.asarray(back.stop[2]), np.asarray(stop))
+    # untouched rows stay zeroed — restore writes one row
+    assert int(back.remaining[0]) == 0 and not bool(back.alive[0])
+
+
+def _offload_workload(cfg, n, max_new=12, sampled=False):
+    from repro.launch.serve import Request, SamplingParams
+    rng = np.random.default_rng(7)
+    erng = np.random.default_rng(11)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, 10))
+        prompt = rng.integers(1, cfg.vocab, plen).astype(np.int32)
+        embeds = None
+        if cfg.enc_dec:
+            embeds = erng.standard_normal(
+                (cfg.enc_len, cfg.d_model)).astype(np.float32)
+        sampling = None
+        if sampled and i % 2:
+            sampling = SamplingParams(temperature=0.8, top_p=0.9,
+                                      seed=100 + i,
+                                      stop_tokens=(cfg.eos_token,))
+        reqs.append(Request(i, prompt, max_new, embeds=embeds,
+                            sampling=sampling))
+    return reqs
+
+
+def _serve(arch, *, sampled, host_offload, stream=True):
+    from repro.launch.serve import BatchedServer
+    server = BatchedServer(arch, smoke=True, batch_slots=2, max_seq=64,
+                           seg_len=4, protocol="bs", stream=stream,
+                           host_offload=host_offload, evict_after=1)
+    for r in _offload_workload(server.cfg, 6, sampled=sampled):
+        server.submit(r)
+    server.run_until_drained(max_steps=100_000)
+    return server
+
+
+@pytest.mark.parametrize("arch", ARCHES)
+@pytest.mark.parametrize("sampled", [False, True],
+                         ids=["greedy", "stochastic"])
+def test_evicted_stream_bitwise(arch, sampled):
+    """An oversubscribed server (6 requests, 2 slots, evict_after=1) that
+    evicts and restores slots mid-decode emits token streams bitwise
+    identical to a never-evicting server — greedy AND fixed-seed
+    stochastic (the PRNG chain head rides the snapshot).  Greedy
+    workloads additionally keep decode syncs/token unchanged: restores
+    dispatch behind in-flight segments without a decode sync."""
+    base = _serve(arch, sampled=sampled, host_offload=False)
+    off = _serve(arch, sampled=sampled, host_offload=True)
+
+    got_b = {r.rid: tuple(r.generated) for r in base.completed}
+    got_o = {r.rid: tuple(r.generated) for r in off.completed}
+    assert got_o == got_b, {
+        r: (got_b[r], got_o.get(r)) for r in got_b
+        if got_b[r] != got_o.get(r)}
+
+    # eviction actually happened, and to requests that then finished
+    assert off.evictions > 0
+    assert any(r.suspensions > 0 for r in off.completed)
+    # accounting closure: every eviction is either restored or found
+    # dead at restore time (its final tokens were still delivered)
+    assert off.restores + off.restored_dead == off.evictions
+    # no leaks: everything drained, host tier empty
+    assert len(off.completed) == 6
+    assert all(r is None for r in off.active)
+    assert not off.suspended and len(off.host_tier) == 0
+    # every eviction is eventually popped back (dead ones included)
+    assert off.host_tier.bytes_evicted == off.host_tier.bytes_restored
+    if not sampled:
+        # restore overlap: the decode loop itself syncs exactly as often
+        assert off.decode_syncs == base.decode_syncs
+
+
+def test_evicted_stream_bitwise_per_token_mode():
+    """The same eviction invariants hold under the bulk-synchronous
+    per-token drive loop (offload is loop-mode agnostic)."""
+    base = _serve("mamba2_370m", sampled=True, host_offload=False,
+                  stream=False)
+    off = _serve("mamba2_370m", sampled=True, host_offload=True,
+                 stream=False)
+    assert {r.rid: tuple(r.generated) for r in off.completed} \
+        == {r.rid: tuple(r.generated) for r in base.completed}
+    assert off.evictions > 0
+    assert off.restores + off.restored_dead == off.evictions
+
+
+# -- prefix-cache reuse ----------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["starcoder2_3b", "mamba2_370m",
+                                  "jamba_1_5_large"])
+def test_prefix_cache_hits(arch):
+    """Prefix reuse against a no-cache baseline: a repeated prompt is a
+    full hit (bitwise stream, NO prefill forward), a prompt extending a
+    cached one is a partial hit (token-equal stream, suffix-only
+    forward), and the accounting closes: every admission is exactly one
+    of {full hit, partial hit, miss}."""
+    from repro.launch.serve import BatchedServer, Request, SamplingParams
+    rng = np.random.default_rng(3)
+    cfg = get_smoke_config(arch)
+    common = rng.integers(1, cfg.vocab, 9).astype(np.int32)
+    ext = np.concatenate([common,
+                          rng.integers(1, cfg.vocab, 5).astype(np.int32)])
+
+    def build(prefix_cache):
+        s = BatchedServer(arch, smoke=True, batch_slots=2, max_seq=64,
+                          seg_len=4, protocol="bs", stream=True,
+                          prefix_cache=prefix_cache)
+        s.submit(Request(0, common.copy(), 8))          # miss -> put
+        s.submit(Request(1, common.copy(), 8,           # full hit
+                         sampling=SamplingParams(temperature=0.7, seed=5)))
+        s.submit(Request(2, ext.copy(), 8))             # partial hit
+        s.run_until_drained(max_steps=100_000)
+        return s
+
+    base, pc = build(False), build(True)
+    got_b = {r.rid: tuple(r.generated) for r in base.completed}
+    got_p = {r.rid: tuple(r.generated) for r in pc.completed}
+
+    assert got_p[0] == got_b[0]          # the miss is untouched
+    assert got_p[1] == got_b[1]          # full hit: bitwise, incl. first
+    #                                      sampled token from stored logits
+    assert got_p[2] == got_b[2]          # partial hit: token-equal resume
+    assert (pc.prefix_hits_full, pc.prefix_hits_partial,
+            pc.prefix_misses) == (1, 1, 1)
+    # closure: every admission took exactly one prefix path
+    assert pc.prefix_hits_full + pc.prefix_hits_partial \
+        + pc.prefix_misses == 3
+    # the full hit skipped its whole prompt, the partial its prefix
+    assert pc.prefill_tokens_skipped == len(common) * 2
+    # one forward saved vs the baseline's three
+    assert pc.prefill_forwards == 2 and base.prefill_forwards == 3
+
+
+def test_prefix_trie_longest_match_and_lru():
+    """PrefixCache unit behavior: longest-prefix lookup, LRU byte-cap
+    eviction, and trie pruning after eviction."""
+    leaf = jnp.zeros((4, 8), jnp.float32)
+    snap = BS.stream_offload_to_host({"x": leaf})
+    pc = BS.PrefixCache(capacity_bytes=None)
+    pc.put([1, 2], snap)
+    pc.put([1, 2, 3], snap)
+    assert pc.lookup([1, 2, 3, 4]).length == 3       # longest wins
+    assert pc.lookup([1, 2, 9]).length == 2          # falls back
+    assert pc.lookup([2]) is None
+    # byte-capped LRU: second put evicts the (stale) first entry
+    small = BS.PrefixCache(capacity_bytes=snap.nbytes + 1)
+    small.put([5], snap)
+    small.put([6], snap)
+    assert small.entries_evicted == 1 and len(small) == 1
+    assert small.lookup([5]) is None and small.lookup([6]) is not None
+    # the evicted branch is pruned from the trie, not just orphaned
+    assert list(small._root.children) == [6]
+
+
+@pytest.mark.parametrize("arch", ["starcoder2_3b", "mamba2_370m",
+                                  "jamba_1_5_large", "gemma3_12b"])
+def test_resume_prefill_matches_full_prefill(arch):
+    """Model-level partial-hit parity: prefix prefill + suffix resume
+    equals one full prefill — same last-token argmax and numerically
+    equal logits/caches; bitwise for the pure-SSM path (the sequential
+    oracle recurrence has one evaluation order)."""
+    from repro.models import transformer as T
+    cfg = get_smoke_config(arch)
+    fns = get_model(cfg)
+    params = fns.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    full_len, start = 12, 7
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, size=(16,)), jnp.int32)
+
+    cache_a = fns.init_cache(cfg, 2, 32)
+    logits_a, cache_a = T.prefill_into_cache(cfg, params, cache_a, toks,
+                                             1, full_len)
+    cache_b = fns.init_cache(cfg, 2, 32)
+    _, cache_b = T.prefill_into_cache(cfg, params, cache_b, toks, 1, start)
+    suffix = toks[start:start + 8]       # bucketed suffix, junk past len
+    logits_b, cache_b = fns.resume_prefill(cfg, params, cache_b, suffix,
+                                           1, full_len, start)
+
+    la, lb = np.asarray(logits_a, np.float32), np.asarray(logits_b,
+                                                          np.float32)
+    assert la.argmax() == lb.argmax(), arch
+    np.testing.assert_allclose(la, lb, rtol=2e-2, atol=2e-2)
+    if arch == "mamba2_370m":
+        assert np.array_equal(la, lb), "SSM resume must be bitwise"
+    for k in cache_a:
+        if k == "pos":
+            continue
+        a, b = np.asarray(cache_a[k]), np.asarray(cache_b[k])
+        if _kind(k) in ("k", "v"):
+            a, b = a[:, 1, :, :full_len], b[:, 1, :, :full_len]
+        else:
+            a, b = a[:, 1], b[:, 1]
+        np.testing.assert_allclose(a.astype(np.float32),
+                                   b.astype(np.float32),
+                                   rtol=2e-2, atol=2e-2, err_msg=str(k))
+
+
+# -- enc-dec single-encoder-pass admission ---------------------------------
+
+def test_encdec_prefill_from_enc_out_parity():
+    """encdec.prefill_into_cache(enc_out=...) is bitwise the enc_embeds
+    path — the factoring that lets target and draft admission share one
+    encoder forward."""
+    from repro.models import encdec
+    cfg = get_smoke_config("whisper_large_v3")
+    params = encdec.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    emb = jnp.asarray(rng.standard_normal((1, cfg.enc_len, cfg.d_model)),
+                      jnp.float32)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, size=(8,)), jnp.int32)
+
+    cache1 = encdec.init_cache(cfg, 2, 32)
+    l1, cache1 = encdec.prefill_into_cache(cfg, params, cache1, toks, 1, 6,
+                                           emb)
+    enc_out = encdec.encode(cfg, params, emb, remat=False)
+    cache2 = encdec.init_cache(cfg, 2, 32)
+    l2, cache2 = encdec.prefill_into_cache(cfg, params, cache2, toks, 1, 6,
+                                           None, enc_out=enc_out)
+    assert np.array_equal(np.asarray(l1), np.asarray(l2))
+    for k in cache1:
+        assert np.array_equal(np.asarray(cache1[k]), np.asarray(cache2[k])), k
+
+
+def test_encdec_spec_admission_single_encoder_pass():
+    """Speculative whisper serving runs ONE encoder pass per admission —
+    the self-draft prefill reuses the target's enc_out (shared encoder
+    params by reference) — and stays bitwise vs non-speculative."""
+    from repro.launch.serve import BatchedServer, Request
+
+    def build(spec):
+        s = BatchedServer("whisper_large_v3", smoke=True, batch_slots=2,
+                          max_seq=64, seg_len=4, protocol="bs",
+                          stream=True, spec=spec)
+        rng = np.random.default_rng(0)
+        for i in range(4):
+            emb = rng.standard_normal(
+                (s.cfg.enc_len, s.cfg.d_model)).astype(np.float32)
+            s.submit(Request(i, rng.integers(1, s.cfg.vocab,
+                                             6).astype(np.int32),
+                             10, embeds=emb))
+        s.run_until_drained(max_steps=100_000)
+        return s
+
+    base, spec = build(False), build(True)
+    assert base.encoder_passes == 4          # one per admission
+    assert spec.encoder_passes == 4          # NOT 8: no draft re-encode
+    assert spec.draft_shares_encoder
+    assert {r.rid: tuple(r.generated) for r in spec.completed} \
+        == {r.rid: tuple(r.generated) for r in base.completed}

@@ -19,6 +19,16 @@ Invariants:
     (including stop-token truncation against the reference stream);
   * the full stochastic workload is bitwise-identical between the
     streamed and per-token drive modes (one PRNG chain, two schedules).
+
+Host-tier offload churn (DESIGN.md §8): the same invariants must hold
+when the resident set outgrows the slots — oversubscribed workloads
+drive demand-driven eviction/restore (and prompt-prefix reuse for
+decoder-only archs) and the streams must stay bitwise vs a
+never-evicting server, with closed accounting: every eviction is
+restored or found dead, every admission takes exactly one prefix path.
+A hypothesis tier (skipped when hypothesis is absent) fuzzes RANDOM
+evict points on the per-token loop — eviction correctness cannot depend
+on the demand policy's timing.
 """
 import numpy as np
 import pytest
@@ -70,11 +80,14 @@ def _make_workload(cfg, rng):
     return reqs
 
 
-def _run(arch, workload, *, stream):
+def _run(arch, workload, *, stream, slots=SLOTS, host_offload=False,
+         prefix_cache=False, evict_after=1):
     from repro.launch.serve import BatchedServer, Request
-    server = BatchedServer(arch, smoke=True, batch_slots=SLOTS,
+    server = BatchedServer(arch, smoke=True, batch_slots=slots,
                            max_seq=MAX_SEQ, protocol="bs", stream=stream,
-                           seg_len=SEG_LEN)
+                           seg_len=SEG_LEN, host_offload=host_offload,
+                           prefix_cache=prefix_cache,
+                           evict_after=evict_after)
     for w in workload:
         server.submit(Request(**{k: v for k, v in w.items()}))
     server.run_until_drained(max_steps=100_000)
@@ -161,3 +174,139 @@ def test_churn_greedy_cohort_matches_whole_sequence_reference(arch):
     server2 = _run(arch, [w], stream=True)
     toks = tuple(server2.completed[0].generated)
     assert toks == tuple(refs[0][:first_occ + 1]), (toks, refs[0], stop_tok)
+
+
+# -- host-tier offload churn (DESIGN.md §8) --------------------------------
+
+def _shared_prefix_workload(cfg, rng):
+    """The churn workload with prompt sharing injected: every 3rd request
+    repeats request 0's prompt (full prefix hits) and every 7th extends
+    it (partial hits) — prefix-reuse accounting must close over all
+    three admission paths."""
+    workload = _make_workload(cfg, rng)
+    base_prompt = workload[0]["prompt"]
+    for i in range(3, N_REQ, 3):
+        workload[i]["prompt"] = base_prompt.copy()
+    for i in range(7, N_REQ, 7):
+        workload[i]["prompt"] = np.concatenate(
+            [base_prompt, rng.integers(1, cfg.vocab, 4).astype(np.int32)])
+    return workload
+
+
+def _offload_invariants(server, n_req):
+    assert len(server.completed) == n_req            # no slot leaks
+    assert all(r is None for r in server.active)
+    assert not server.queue and not server.suspended
+    # eviction/restore closure: every eviction is either restored or
+    # found dead at restore time; the host tier fully drains
+    assert server.restores + server.restored_dead == server.evictions
+    assert len(server.host_tier) == 0
+    assert server.host_tier.bytes_evicted == server.host_tier.bytes_restored
+
+
+@pytest.mark.parametrize("arch", ["mamba2_370m"])
+def test_churn_offload_prefix_accounting_closure(arch):
+    """Fast tier: an oversubscribed slice of the churn workload under
+    offload + prefix reuse stays bitwise vs the never-evicting server,
+    with closed eviction and prefix accounting."""
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(42)
+    workload = _shared_prefix_workload(cfg, rng)[:12]
+
+    base = _run(arch, workload, stream=True, slots=2)
+    off = _run(arch, workload, stream=True, slots=2, host_offload=True,
+               prefix_cache=True)
+    got_b = {r.rid: tuple(r.generated) for r in base.completed}
+    got_o = {r.rid: tuple(r.generated) for r in off.completed}
+    assert got_o == got_b, {
+        r: (got_b[r], got_o.get(r)) for r in got_b
+        if got_b[r] != got_o.get(r)}
+    _offload_invariants(off, len(workload))
+    assert off.evictions > 0
+    # prefix closure: every admission took exactly one path, and the
+    # injected prompt sharing produced real hits that skipped prefill
+    assert off.prefix_hits_full + off.prefix_hits_partial \
+        + off.prefix_misses == len(workload)
+    assert off.prefix_hits_full > 0
+    assert off.prefill_tokens_skipped > 0
+    assert off.prefill_forwards < base.prefill_forwards
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ARCHES)
+def test_churn_3x_oversubscribed_offload(arch):
+    """Stress tier: the FULL 33-request churn workload over 4 slots with
+    demand-driven eviction — live cache state (hot slots + host tier)
+    grows past the slot count, every stream stays bitwise vs the
+    never-evicting server, and the accounting closes.  Prefix reuse
+    rides along for decoder-only archs (enc-dec prompts are keyed on
+    audio frames)."""
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(42)
+    prefix = not cfg.enc_dec
+    workload = (_shared_prefix_workload(cfg, rng) if prefix
+                else _make_workload(cfg, rng))
+
+    base = _run(arch, workload, stream=True)
+    off_server = _run(arch, workload, stream=True, host_offload=True,
+                      prefix_cache=prefix)
+    got_b = {r.rid: tuple(r.generated) for r in base.completed}
+    got_o = {r.rid: tuple(r.generated) for r in off_server.completed}
+    assert got_o == got_b, {
+        r: (got_b[r], got_o.get(r)) for r in got_b
+        if got_b[r] != got_o.get(r)}
+    _offload_invariants(off_server, N_REQ)
+    # the workload is oversubscribed enough to force real churn: many
+    # evictions, and at least some requests survived multiple rounds
+    assert off_server.evictions >= SLOTS
+    assert any(r.suspensions >= 2 for r in off_server.completed)
+    if prefix:
+        assert off_server.prefix_hits_full + off_server.prefix_hits_partial \
+            + off_server.prefix_misses == N_REQ
+        assert off_server.prefix_hits_full > 0
+        assert off_server.prefix_hits_partial > 0
+
+
+def test_random_suspend_interleavings_hypothesis():
+    """Property tier (needs hypothesis): evict/restore correctness must
+    not depend on the demand policy's TIMING — suspend random active
+    slots at random per-token steps and the streams must still be
+    bitwise vs the never-evicting server, with closed accounting."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    from repro.launch.serve import BatchedServer, Request
+
+    arch = "mamba2_370m"
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(9)
+    workload = _make_workload(cfg, rng)[:6]
+    baseline = _run(arch, workload, stream=False, slots=2)
+    want = {r.rid: tuple(r.generated) for r in baseline.completed}
+
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(data=st.data())
+    def check(data):
+        server = BatchedServer(arch, smoke=True, batch_slots=2,
+                               max_seq=MAX_SEQ, protocol="bs",
+                               stream=False, seg_len=SEG_LEN,
+                               host_offload=True,
+                               evict_after=10 ** 9)   # manual evicts only
+        for w in workload:
+            server.submit(Request(**w))
+        guard = 0
+        while (server.queue or server.suspended
+               or any(r is not None for r in server.active)):
+            server.step()
+            guard += 1
+            assert guard < 2000
+            active = [s for s in range(2)
+                      if server.active[s] is not None]
+            if active and data.draw(st.booleans()):
+                server.suspend_slot(data.draw(st.sampled_from(active)))
+        got = {r.rid: tuple(r.generated) for r in server.completed}
+        assert got == want
+        _offload_invariants(server, len(workload))
+
+    check()
