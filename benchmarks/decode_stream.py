@@ -125,6 +125,73 @@ def _run_server(arch: str, stream: bool, sampled: bool = False,
     return server, dt
 
 
+PAGE_SIZE = 8            # the paged row's KV page width (DESIGN.md §9)
+PREFILL_CHUNK = 8        # the chunked-admission row's chunk width
+LONG_PROMPT = 48         # admitted chunk-by-chunk into the busy batch
+
+
+def _run_paged_server(arch: str, shuffle: bool):
+    """The greedy streamed workload on a `PAGE_SIZE`-paged cache; with
+    `shuffle`, every row's page table is permuted BEFORE any prefill —
+    chunk-as-page equivalence says the streams must not move a bit."""
+    import jax.numpy as jnp
+    from repro.launch.serve import BatchedServer, Request
+    server = BatchedServer(arch, smoke=True, batch_slots=SLOTS,
+                           max_seq=64, protocol="bs", stream=True,
+                           seg_len=SEG_LEN, page_size=PAGE_SIZE)
+    if shuffle and "page_table" in server.cache:
+        pt = np.asarray(server.cache["page_table"])
+        prng = np.random.default_rng(13)
+        server.cache["page_table"] = jnp.asarray(
+            np.stack([prng.permutation(pt.shape[1])
+                      for _ in range(pt.shape[0])]), np.int32)
+    rng = np.random.default_rng(0)
+    for i in range(N_REQ):
+        plen = int(rng.integers(3, 7))
+        server.submit(Request(i, rng.integers(
+            1, server.cfg.vocab, plen).astype(np.int32), MAX_NEW))
+    t0 = time.perf_counter()
+    server.run_until_drained()
+    dt = time.perf_counter() - t0
+    return server, dt
+
+
+def _run_chunked_server(arch: str, with_long: bool):
+    """Short greedy requests, plus (with_long) one LONG_PROMPT request
+    admitted through `prefill_chunk`-token chunks interleaved with the
+    decode segments.  Records decode_syncs at each request's retirement
+    so the row can assert the in-flight streams never stalled."""
+    from repro.launch.serve import BatchedServer, Request
+
+    class Tracking(BatchedServer):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self.retire_syncs = {}
+
+        def _consume_segment(self, *a, **kw):
+            before = {r.rid for r in self.completed}
+            super()._consume_segment(*a, **kw)
+            for r in self.completed:
+                if r.rid not in before and r.rid not in self.retire_syncs:
+                    self.retire_syncs[r.rid] = self.decode_syncs
+
+    server = Tracking(arch, smoke=True, batch_slots=SLOTS + 1,
+                      max_seq=64, protocol="bs", stream=True,
+                      seg_len=SEG_LEN, prefill_chunk=PREFILL_CHUNK)
+    rng = np.random.default_rng(0)
+    for i in range(SLOTS):
+        plen = int(rng.integers(3, 7))
+        server.submit(Request(i, rng.integers(
+            1, server.cfg.vocab, plen).astype(np.int32), MAX_NEW))
+    if with_long:
+        server.submit(Request(SLOTS, rng.integers(
+            1, server.cfg.vocab, LONG_PROMPT).astype(np.int32), MAX_NEW))
+    t0 = time.perf_counter()
+    server.run_until_drained()
+    dt = time.perf_counter() - t0
+    return server, dt
+
+
 def run() -> List[Row]:
     rows: List[Row] = []
     for arch in ARCHES:
@@ -240,6 +307,63 @@ def run() -> List[Row]:
             f"prefill_tokens_skipped={server.prefill_tokens_skipped};"
             f"prefill_forwards={server.prefill_forwards};"
             f"baseline_prefill_forwards={base.prefill_forwards}"))
+        # block-sparse KV paging (DESIGN.md §9): the greedy streamed
+        # workload on a PAGE_SIZE-paged cache, identity vs shuffled
+        # per-row page tables — chunk-as-page equivalence makes the
+        # physical placement bitwise-invisible, at unchanged sync cost.
+        base, _ = _run_paged_server(arch, shuffle=False)
+        base_streams = {r.rid: tuple(r.generated) for r in base.completed}
+        server, dt = _run_paged_server(arch, shuffle=True)
+        got = {r.rid: tuple(r.generated) for r in server.completed}
+        assert got == base_streams, f"paged tokens diverged: {arch}"
+        assert server.decode_syncs == base.decode_syncs, arch
+        assert server.pages_allocated == server.pages_freed \
+            and server.pages_resident == 0, arch
+        toks = sum(len(r.generated) for r in server.completed)
+        rows.append((
+            f"decode_stream.stream.paged{suffix}",
+            dt / max(1, toks) * 1e6,
+            f"tokens={toks};page_size={PAGE_SIZE};"
+            f"paged={int(server.cfg.has_attention)};"
+            f"decode_syncs={server.decode_syncs};"
+            f"syncs_per_token={server.decode_syncs / max(1, toks):.4f};"
+            f"tokens_bitwise_identity_table=1;"
+            f"pages_resident={server.pages_resident};"
+            f"pages_resident_peak={server.pages_resident_peak};"
+            f"pages_allocated={server.pages_allocated};"
+            f"pages_freed={server.pages_freed}"))
+        # chunked admission prefill (DESIGN.md §9): a LONG_PROMPT request
+        # admitted in PREFILL_CHUNK-token chunks between decode segments
+        # of a busy batch.  The in-flight stall assertion: every short
+        # row retires at the SAME decode_syncs count as in the
+        # no-admission run, with bitwise-identical tokens.
+        base, _ = _run_chunked_server(arch, with_long=False)
+        base_streams = {r.rid: tuple(r.generated) for r in base.completed}
+        server, dt = _run_chunked_server(arch, with_long=True)
+        got = {r.rid: tuple(r.generated) for r in server.completed}
+        for rid, want in base_streams.items():
+            assert got[rid] == want, f"in-flight stream moved: {arch}/{rid}"
+        assert {r: server.retire_syncs[r] for r in base.retire_syncs} \
+            == base.retire_syncs, f"in-flight stream stalled: {arch}"
+        n_chunks = -(-LONG_PROMPT // PREFILL_CHUNK)
+        assert server.prefill_chunks == n_chunks, arch
+        assert server.pages_allocated == server.pages_freed \
+            and server.pages_resident == 0, arch
+        toks = sum(len(r.generated) for r in server.completed)
+        chunk_us = (server.prefill_chunk_time
+                    / max(1, server.prefill_chunks) * 1e6)
+        rows.append((
+            f"decode_stream.stream.chunked_prefill{suffix}",
+            dt / max(1, toks) * 1e6,
+            f"tokens={toks};long_prompt={LONG_PROMPT};"
+            f"prefill_chunk={PREFILL_CHUNK};"
+            f"prefill_chunks={server.prefill_chunks};"
+            f"prefill_chunk_us={chunk_us:.1f};"
+            f"decode_syncs={server.decode_syncs};"
+            f"baseline_decode_syncs={base.decode_syncs};"
+            f"inflight_syncs_match_baseline=1;"
+            f"inflight_tokens_bitwise_baseline=1;"
+            f"pages_resident_peak={server.pages_resident_peak}"))
     return rows
 
 

@@ -287,11 +287,28 @@ def _decode_valid_mask(pos_b: jax.Array, s: int, window: int) -> jax.Array:
     return valid
 
 
+def physical_slots(pages: jax.Array, slots: jax.Array,
+                   page_size: int) -> jax.Array:
+    """Translate LOGICAL cache slot ids to PHYSICAL pool rows through the
+    page table (DESIGN.md §9).  pages: (B, n_pages) int32; slots: (B,)
+    or (B, T) int32 logical positions within each row.  Returns physical
+    row ids of the same shape — every cache write in the models goes
+    through this one translation."""
+    slots = jnp.asarray(slots, jnp.int32)
+    b = pages.shape[0]
+    flat = slots.reshape(b, -1)
+    phys_page = jnp.take_along_axis(pages.astype(jnp.int32),
+                                    flat // page_size, axis=1)
+    return (phys_page * page_size + flat % page_size).reshape(slots.shape)
+
+
 def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
                               v_cache: jax.Array, pos: jax.Array,
                               *, window: int = 0,
                               n_chunks: Optional[int] = None,
-                              extra: Optional[Any] = None) -> jax.Array:
+                              extra: Optional[Any] = None,
+                              pages: Optional[jax.Array] = None
+                              ) -> jax.Array:
     """Single-step attention of q (B,1,H,hd) against a (possibly sequence-
     sharded) KV cache (B,KH,S,hd), combined under the active offload
     protocol.  `pos` is the last valid cache slot — a scalar, or a (B,)
@@ -310,11 +327,24 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
     statistics cross shards - this is the paper's partial-offload structure
     (Table I, LLM row).  BS merges them with one bulk collective; AXLE
     streams them around the ring with ppermute hops that overlap compute.
+
+    `pages`: optional (B, n_pages) int32 page table (DESIGN.md §9) — the
+    cache panels are then physical page pools.  The fused path reads them
+    through in-kernel page-list indirection (page size = the kernel
+    chunk); the chunked fallback and the AXLE ring gather pages to
+    logical order first (`ref.gather_kv_pages`), which yields the exact
+    same array the dense path would see, so every schedule stays
+    bitwise-equal to its dense twin.
     """
     from repro.kernels import ops
+    from repro.kernels import ref as _ref
     cfg = current_offload()
     rules = active_rules()
     b, kh, s, hd = k_cache.shape
+    page_size = 0
+    if pages is not None:
+        assert s % pages.shape[1] == 0, (s, pages.shape)
+        page_size = s // pages.shape[1]
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
 
     mesh = rules.mesh if rules is not None else None
@@ -334,6 +364,9 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
             b_size *= mesh.shape[a]
         if b_size == 0 or b % b_size:
             b_axes = None
+        if pages is not None:
+            k_cache = _ref.gather_kv_pages(k_cache, pages, page_size)
+            v_cache = _ref.gather_kv_pages(v_cache, pages, page_size)
         kv_valid = _decode_valid_mask(pos_b, s, window)
         return _axle_ring_decode(q, k_cache, v_cache, kv_valid, mesh, axis,
                                  b_axes, extra)
@@ -349,6 +382,12 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
         # partition a pallas_call over a sequence-sharded cache; sharded
         # decode goes through the AXLE shard_map ring whose local compute
         # is device-local.
+        if pages is not None:
+            # paged fast path: the kernel chunk IS the page; the table
+            # drives the k/v DMA index maps in-kernel, no gather
+            return ops.decode_attention_fused(q, k_cache, v_cache, pos_b,
+                                              extra, pages, window=window,
+                                              blk_c=page_size)
         blk_c = max(1, min(128, s // max(1, n_chunks)))
         return ops.decode_attention_fused(q, k_cache, v_cache, pos_b, extra,
                                           window=window, blk_c=blk_c)
@@ -357,6 +396,11 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
     # partials + one merge.  With a sequence-sharded cache GSPMD lowers the
     # merge to a bulk all-gather of the (acc, m, l) statistics: the
     # bulk-synchronous flow.
+    if pages is not None:
+        # page-aware fallback: gather to logical order, then the dense
+        # chunked schedule — identical arrays, identical partials
+        k_cache = _ref.gather_kv_pages(k_cache, pages, page_size)
+        v_cache = _ref.gather_kv_pages(v_cache, pages, page_size)
     kv_valid = _decode_valid_mask(pos_b, s, window)
     accs, ms, ls = _partials_over_chunks(q, k_cache, v_cache, kv_valid,
                                          n_chunks)

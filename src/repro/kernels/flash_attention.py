@@ -305,6 +305,7 @@ def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
                            extra: Optional[Tuple[jax.Array, jax.Array,
                                                  jax.Array]] = None,
                            *, window: int = 0, blk_c: int = 128,
+                           pages: Optional[jax.Array] = None,
                            interpret: bool = False) -> jax.Array:
     """One-shot flash decode: q (B,1,H,hd) against the whole KV cache
     k/v (B,KH,S,hd), with per-batch-row positions pos (B,) (or a scalar,
@@ -315,15 +316,33 @@ def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
     ONE pallas_call for the whole sequence: the chunk axis is the
     innermost grid dimension and (acc, m, l) accumulate in VMEM scratch,
     so there are no per-chunk launches and no partial-statistic HBM
-    round trips (vs the lax.map + XLA-merge fallback)."""
+    round trips (vs the lax.map + XLA-merge fallback).
+
+    `pages`: optional (B, n_log) int32 page table (DESIGN.md §9).  A page
+    IS a kernel chunk: the grid's chunk axis iterates the n_log LOGICAL
+    pages in order and each one is DMA'd from physical chunk
+    `pages[b, j]` of the k/v pool via scalar-prefetch-driven BlockSpec
+    index maps.  `blk_c` must then be the exact page size (a divisor of
+    the pool's seq axis; no divisor search).  `pos`, `window` and the
+    masking iota keep their LOGICAL meaning, so the reduction order —
+    and therefore the float result, bit for bit — is identical to the
+    dense kernel on the logically-gathered cache for ANY physical
+    placement.  Table entries past a row's valid length must merely be
+    in-bounds page ids; validity masks their lanes out."""
     b, _, h, hd = q.shape
     kh, s = k.shape[1], k.shape[2]
     assert h % kh == 0
     group = h // kh
-    blk_c = max(1, min(blk_c, s))
-    while s % blk_c:              # largest divisor of s not above blk_c
-        blk_c -= 1
-    n_c = s // blk_c
+    if pages is None:
+        blk_c = max(1, min(blk_c, s))
+        while s % blk_c:          # largest divisor of s not above blk_c
+            blk_c -= 1
+        n_c = s // blk_c
+    else:
+        # paged: blk_c IS the page size, exact; the chunk axis spans the
+        # logical page list, not the physical pool
+        assert s % blk_c == 0, (s, blk_c)
+        n_c = pages.shape[1]
     scale = hd ** -0.5
 
     qt = q[:, 0].reshape(b, kh, group, hd)                # (B,KH,group,hd)
@@ -333,12 +352,28 @@ def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
     kernel = functools.partial(
         _decode_fused_kernel, scale=scale, blk_c=blk_c, n_c=n_c,
         window=window, group=group, has_extra=extra is not None)
+
+    def _maps(paged):
+        # index maps; under scalar prefetch every map takes the table
+        # ref as a trailing argument (only k/v consult it)
+        if paged:
+            return (lambda b_, h_, j, t: (b_, 0),
+                    lambda b_, h_, j, t: (b_, h_, 0, 0),
+                    lambda b_, h_, j, t: (b_, h_, t[b_, j], 0),
+                    lambda b_, h_, j, t: (b_, h_, 0),
+                    lambda b_, h_, j, t: (b_, h_, 0, 0))
+        return (lambda b_, h_, j: (b_, 0),
+                lambda b_, h_, j: (b_, h_, 0, 0),
+                lambda b_, h_, j: (b_, h_, j, 0),
+                lambda b_, h_, j: (b_, h_, 0),
+                lambda b_, h_, j: (b_, h_, 0, 0))
+
+    pos_map, head_map, chunk_map, vec_map, out_map = _maps(pages is not None)
     in_specs = [
-        pl.BlockSpec((1, 1), lambda b_, h_, j: (b_, 0),
-                     memory_space=pltpu.SMEM),
-        pl.BlockSpec((1, 1, group, hd), lambda b_, h_, j: (b_, h_, 0, 0)),
-        pl.BlockSpec((1, 1, blk_c, hd), lambda b_, h_, j: (b_, h_, j, 0)),
-        pl.BlockSpec((1, 1, blk_c, hd), lambda b_, h_, j: (b_, h_, j, 0)),
+        pl.BlockSpec((1, 1), pos_map, memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, 1, group, hd), head_map),
+        pl.BlockSpec((1, 1, blk_c, hd), chunk_map),
+        pl.BlockSpec((1, 1, blk_c, hd), chunk_map),
     ]
     args = [pos2, qt, k, v]
     if extra is not None:
@@ -347,26 +382,38 @@ def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
                  m_e.astype(jnp.float32).reshape(b, kh, group),
                  l_e.astype(jnp.float32).reshape(b, kh, group)]
         in_specs += [
-            pl.BlockSpec((1, 1, group, hd),
-                         lambda b_, h_, j: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, 1, group), lambda b_, h_, j: (b_, h_, 0)),
-            pl.BlockSpec((1, 1, group), lambda b_, h_, j: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, group, hd), head_map),
+            pl.BlockSpec((1, 1, group), vec_map),
+            pl.BlockSpec((1, 1, group), vec_map),
         ]
 
-    out = pl.pallas_call(
-        kernel,
-        grid=(b, kh, n_c),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, group, hd),
-                               lambda b_, h_, j: (b_, h_, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, kh, group, hd), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((group, hd), jnp.float32),
-            pltpu.VMEM((group,), jnp.float32),
-            pltpu.VMEM((group,), jnp.float32),
-        ],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(*args)
+    out_specs = pl.BlockSpec((1, 1, group, hd), out_map)
+    out_shape = jax.ShapeDtypeStruct((b, kh, group, hd), q.dtype)
+    scratch_shapes = [
+        pltpu.VMEM((group, hd), jnp.float32),
+        pltpu.VMEM((group,), jnp.float32),
+        pltpu.VMEM((group,), jnp.float32),
+    ]
+    params = _CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    if pages is None:
+        out = pl.pallas_call(
+            kernel, grid=(b, kh, n_c), in_specs=in_specs,
+            out_specs=out_specs, out_shape=out_shape,
+            scratch_shapes=scratch_shapes, compiler_params=params,
+            interpret=interpret,
+        )(*args)
+    else:
+        # the page table rides scalar prefetch: resident before the body
+        # runs, visible to the BlockSpec index maps (and prepended to the
+        # kernel signature, where the body has no use for it)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(b, kh, n_c), in_specs=in_specs,
+            out_specs=out_specs, scratch_shapes=scratch_shapes)
+        out = pl.pallas_call(
+            lambda tbl_ref, *rest: kernel(*rest),
+            grid_spec=grid_spec, out_shape=out_shape,
+            compiler_params=params, interpret=interpret,
+        )(pages.astype(jnp.int32), *args)
     return out.reshape(b, 1, h, hd)

@@ -50,18 +50,27 @@ def decode_attention_partial(q, k, v, valid, *, blk_c: int = 128,
 
 
 @functools.partial(jax.jit, static_argnames=("window", "blk_c", "interpret"))
-def decode_attention_fused(q, k, v, pos, extra=None, *, window: int = 0,
-                           blk_c: int = 128,
+def decode_attention_fused(q, k, v, pos, extra=None, pages=None, *,
+                           window: int = 0, blk_c: int = 128,
                            interpret: bool = False) -> jax.Array:
     """Fused one-shot flash decode (produce + merge + normalize in ONE
     kernel launch).  q: (B,1,H,hd); k,v: (B,KH,S,hd); pos: (B,) or scalar
     per-row positions; extra: optional (acc, m, l) current-token partial.
+    `pages`: optional (B, n_log) int32 page table — k/v are then physical
+    page POOLS read through per-row page-list indirection, `blk_c` is the
+    exact page size, and `pos` keeps its logical meaning (DESIGN.md §9).
+    The paged result is bitwise-equal to the dense kernel on the
+    logically-gathered cache for any physical placement, because the
+    chunk reduction visits pages in logical order either way.
     Returns (B,1,H,hd)."""
     if _on_tpu() or interpret:
         return _fa.decode_attention_fused(q, k, v, pos, extra,
                                           window=window, blk_c=blk_c,
-                                          interpret=interpret)
-    return _ref.decode_fused_reference(q, k, v, pos, extra, window=window)
+                                          pages=pages, interpret=interpret)
+    return _ref.decode_fused_reference(q, k, v, pos, extra, window=window,
+                                       pages=pages,
+                                       page_size=blk_c if pages is not None
+                                       else 0)
 
 
 class BatchedSampling(NamedTuple):

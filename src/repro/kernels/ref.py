@@ -73,18 +73,49 @@ def decode_partial_reference(q: jax.Array, k: jax.Array, v: jax.Array,
     return acc, m, l
 
 
+def gather_kv_pages(kv: jax.Array, pages: jax.Array,
+                    page_size: int) -> jax.Array:
+    """Gather a paged KV panel into LOGICAL page order.
+
+    kv: (B, KH, S_phys, hd) physical storage whose seq axis is a pool of
+    `S_phys // page_size` pages; pages: (B, n_log) int32 page table
+    mapping each row's logical page j to a physical page id.  Returns
+    (B, KH, n_log * page_size, hd): the dense logical view.  This is the
+    paged oracle's entire trick — once gathered, the dense reference (and
+    the dense fused kernel, which reduces chunks in logical j order)
+    computes bit-for-bit the same result, so ANY physical placement is
+    bitwise-equivalent to the dense path (DESIGN.md §9)."""
+    b, kh, s_phys, hd = kv.shape
+    assert s_phys % page_size == 0, (s_phys, page_size)
+    n_log = pages.shape[1]
+    kvr = kv.reshape(b, kh, s_phys // page_size, page_size, hd)
+    idx = pages.astype(jnp.int32)[:, None, :, None, None]
+    out = jnp.take_along_axis(kvr, jnp.broadcast_to(
+        idx, (b, kh, n_log, 1, 1)), axis=2)
+    return out.reshape(b, kh, n_log * page_size, hd)
+
+
 def decode_fused_reference(q: jax.Array, k: jax.Array, v: jax.Array,
                            pos: jax.Array,
                            extra: Optional[Tuple[jax.Array, jax.Array,
                                                  jax.Array]] = None,
-                           *, window: int = 0) -> jax.Array:
+                           *, window: int = 0,
+                           pages: Optional[jax.Array] = None,
+                           page_size: int = 0) -> jax.Array:
     """Oracle for the fused one-shot flash-decode kernel.
 
     q: (B,1,H,hd); k,v: (B,KH,S,hd); pos: (B,) int32 (or scalar,
     broadcast) — per-row last valid cache slot; slots `pos-window < slot
     <= pos` are attended (window=0 => no lower bound).  `extra` is an
     optional (acc (B,H,hd), m (B,H), l (B,H)) partial merged before
-    normalization.  Returns (B,1,H,hd) in q.dtype."""
+    normalization.  `pages`/`page_size`: optional (B, n_log) int32 page
+    table — k/v are then PHYSICAL pools gathered to logical order first
+    (`gather_kv_pages`), and `pos`/`window` keep their logical meaning.
+    Returns (B,1,H,hd) in q.dtype."""
+    if pages is not None:
+        assert page_size > 0, "page_size required with pages"
+        k = gather_kv_pages(k, pages, page_size)
+        v = gather_kv_pages(v, pages, page_size)
     b, _, h, hd = q.shape
     s = k.shape[2]
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))

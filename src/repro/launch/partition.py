@@ -149,6 +149,16 @@ def cache_specs(abstract_cache: Dict[str, Any], cfg: ArchConfig,
             out[k] = P(b_axes if _divisible(shape[0], mesh, b_axes)
                        else None)
             continue
+        if k == "page_table":
+            # (B, n_pages) int32 page indices (DESIGN.md §9): rows follow
+            # the batch sharding of the KV panels they index; the page
+            # axis is tiny and never sharded.  NOTE the pages point into
+            # the row's own (S, hd) panel, so sequence-axis (tp) sharding
+            # of the panels composes only when pages don't cross shards —
+            # the serve loop keeps tables per-row-local.
+            out[k] = P(b_axes if _divisible(shape[0], mesh, b_axes)
+                       else None, None)
+            continue
         batch_ax = b_axes if _divisible(shape[1], mesh, b_axes) else None
         if k.startswith(("k", "v")) and not k.startswith("conv"):
             seq_ax = tp if (tp and _divisible(shape[3], mesh, tp)) else None

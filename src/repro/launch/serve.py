@@ -269,7 +269,9 @@ class BatchedServer:
                  spec: bool = False, spec_k: int = 3,
                  draft_arch: Optional[str] = None,
                  host_offload: bool = False, prefix_cache: bool = False,
-                 evict_after: int = 1, offload_chunks: int = 2):
+                 evict_after: int = 1, offload_chunks: int = 2,
+                 page_size: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.cfg = (get_smoke_config(arch_id) if smoke
                     else get_config(arch_id))
         self.model = get_model(self.cfg)
@@ -282,7 +284,25 @@ class BatchedServer:
         self.rules = sh.ShardingRules(mesh, seq_shard_attn=True) \
             if mesh is not None else None
         self.params = self.model.init_params(self.cfg, jax.random.key(0))
-        self.cache = self.model.init_cache(self.cfg, batch_slots, max_seq)
+        # block-sparse KV paging (DESIGN.md §9): attention caches carry a
+        # (B, n_pages) page table; `page_size` overrides the default
+        # chunk-as-page size (which reproduces the dense kernel's grid).
+        self.cache = self.model.init_cache(self.cfg, batch_slots, max_seq,
+                                           page_size=page_size)
+        # page ledger: one logical page = `page_size` sequence positions
+        # of one slot row, charged for the row's full prompt+budget span
+        # at admission and released at every retirement/suspension path
+        # (closure invariant: allocated == freed + resident, asserted by
+        # tests/test_serve_churn.py).  Pure-SSM caches have no page
+        # table; the ledger still tracks logical KV-footprint spans with
+        # the default page size so the accounting is arch-uniform.
+        self.page_size = (transformer.cache_page_size(self.cache)
+                          if "page_table" in self.cache
+                          else transformer.default_page_size(max_seq))
+        self.pages_allocated = 0
+        self.pages_freed = 0
+        self.pages_resident_peak = 0
+        self.slot_pages = np.zeros((batch_slots,), np.int64)
         # cache donation: in-place ring-slot updates (§Perf iteration D3)
         # per-token mode is a seg_len-1 segment through the SAME sampling
         # machinery, so both loop modes share one PRNG chain / stop
@@ -426,6 +446,28 @@ class BatchedServer:
             resume = steps_lib.make_resume_prefill(self.cfg)
             self.resume_fn = (jax.jit(resume, donate_argnums=(1,))
                               if resume is not None else None)
+        # ---- chunked admission prefill (DESIGN.md §9) --------------------
+        # `prefill_chunk=C` admits prompts longer than C in C-token chunks
+        # dispatched at most ONE per loop tick, each slotted BEHIND the
+        # decode segment just dispatched — a 10k-token prompt admits
+        # without adding a single decode sync for the in-flight streams.
+        self.prefill_chunk = prefill_chunk
+        self.prefilling: Dict[int, Dict[str, Any]] = {}
+        if prefill_chunk is not None:
+            assert prefill_chunk >= 1, prefill_chunk
+            assert not spec, \
+                "chunked prefill under speculative serving is a ROADMAP item"
+            assert not prefix_cache, \
+                "chunked prefill under prefix reuse is a ROADMAP item"
+            assert not self.cfg.enc_dec, \
+                "enc-dec prompts admit via the encoder, not chunked prefill"
+            cp = steps_lib.make_chunked_prefill(self.cfg)
+            assert cp is not None, self.cfg.arch_id
+            self.chunk_first_fn = jax.jit(cp.first, donate_argnums=(1,))
+            self.chunk_resume_fn = jax.jit(cp.resume, donate_argnums=(1,))
+            self.chunk_plan = cp.plan
+        self.prefill_chunks = 0        # chunk forwards dispatched
+        self.prefill_chunk_time = 0.0  # host-side chunk dispatch seconds
         self.evictions = 0
         self.restores = 0
         self.restored_dead = 0         # evicted rows that died in flight
@@ -458,6 +500,32 @@ class BatchedServer:
 
     def _ctx(self):
         return self.rules.mesh if self.rules is not None else _null()
+
+    # -- page ledger (DESIGN.md §9) ----------------------------------------
+
+    def _alloc_pages(self, slot: int, footprint: int) -> None:
+        """Charge `slot` the page span of a `footprint`-position row:
+        the row's whole prompt + budget reservation, known at admission
+        (the ring cache physically reserves max_seq regardless — the
+        ledger tracks the LOGICAL reservation the paged cache could
+        reclaim)."""
+        n = -(-min(footprint, self.max_seq) // self.page_size)
+        assert self.slot_pages[slot] == 0, (slot, self.slot_pages[slot])
+        self.slot_pages[slot] = n
+        self.pages_allocated += n
+        self.pages_resident_peak = max(self.pages_resident_peak,
+                                       self.pages_resident)
+
+    def _free_pages(self, slot: int) -> None:
+        self.pages_freed += int(self.slot_pages[slot])
+        self.slot_pages[slot] = 0
+
+    @property
+    def pages_resident(self) -> int:
+        """Pages currently charged to occupied (active or mid-chunked-
+        prefill) slots; `allocated == freed + resident` at every point,
+        so `allocated == freed` in a drained server (no page leaks)."""
+        return int(self.slot_pages.sum())
 
     def _prefill(self, slot: int, req: Request) -> jax.Array:
         """Real prefill: the whole prompt through the jitted prefill step
@@ -613,6 +681,7 @@ class BatchedServer:
             steps_lib.save_slot_state(self.state, slot))
         self.host_tier.put(req.rid, snap, saved)
         self.active[slot] = None
+        self._free_pages(slot)
         self.suspended.append(req)
         req.suspensions += 1
         self.evictions += 1
@@ -644,6 +713,7 @@ class BatchedServer:
         self.state = steps_lib.restore_slot(self.state, slot, saved)
         self.positions[slot] = int(saved["position"])
         self.remaining[slot] = int(saved["remaining"])
+        self._alloc_pages(slot, self.positions[slot] + self.remaining[slot])
         self.slot_age[slot] = 0
         self.restores += 1
         self.restore_dispatch_time += time.perf_counter() - t0
@@ -655,7 +725,8 @@ class BatchedServer:
         segments since (re-)admission) to the host tier — but never a
         row younger than `evict_after` segments, the quantum that keeps
         the loop round-robin instead of thrashing."""
-        free = sum(r is None for r in self.active)
+        free = sum(self.active[s] is None and s not in self.prefilling
+                   for s in range(self.batch))
         need = len(self.queue) + len(self.suspended) - free
         if need <= 0:
             return
@@ -683,6 +754,18 @@ class BatchedServer:
             assert len(req.prompt) + max_new + self.spec_k <= self.max_seq, \
                 (len(req.prompt), max_new, self.spec_k, self.max_seq)
         logits = self._admit_prefill(slot, req)
+        self._alloc_pages(slot, len(req.prompt) + max_new)
+        return self._finish_admit(slot, req, logits)
+
+    def _finish_admit(self, slot: int, req: Request,
+                      logits: jax.Array) -> bool:
+        """The admission tail shared by one-shot (`_admit`) and chunked
+        (`_pump_prefill`) prefill: sample the first token from the last
+        prompt position's logits (split #0 of the request's chain — the
+        one admission host sync) and seed the device SlotState row.
+        Returns False if the request finished on its first token."""
+        sp = req.sampling or GREEDY
+        max_new = sp.max_new if sp.max_new is not None else req.max_new
         key, sub = jax.random.split(jax.random.PRNGKey(sp.seed))
         samp1 = ops.BatchedSampling(
             temperature=jnp.full((1,), sp.temperature, jnp.float32),
@@ -709,6 +792,66 @@ class BatchedServer:
             stop=jnp.asarray(stop))
         return True
 
+    # -- chunked admission scheduling (DESIGN.md §9) -----------------------
+
+    def _begin_chunked(self, slot: int, req: Request) -> None:
+        """Reserve `slot` for a chunked admission: the slot joins the
+        `prefilling` map (kept out of decode dispatch, slot filling and
+        eviction) and its pages are charged now — the chunks about to
+        land write into them.  No forward runs here; `_pump_prefill`
+        dispatches the chunks one loop tick at a time."""
+        sp = req.sampling or GREEDY
+        max_new = sp.max_new if sp.max_new is not None else req.max_new
+        plen = len(req.prompt)
+        assert plen <= self.max_seq, (plen, self.max_seq)
+        self.prefilling[slot] = {
+            "req": req,
+            "plan": self.chunk_plan(plen, self.prefill_chunk),
+            "next": 0,
+        }
+        self._alloc_pages(slot, plen + max_new)
+
+    def _pump_prefill(self) -> None:
+        """Dispatch AT MOST ONE prefill chunk — the scheduler's interleave
+        invariant: between consecutive decode segments the device sees at
+        most one bounded-latency chunk forward, so in-flight streams keep
+        their segment cadence (and `decode_syncs`) bit-for-bit unchanged
+        while a long prompt admits.  Chunk forwards are pure async
+        dispatch; the only host sync is the final chunk's first-token
+        sample (inside `_finish_admit`, accounted like any admission)."""
+        if not self.prefilling:
+            return
+        slot = min(self.prefilling)          # deterministic FIFO-by-slot
+        st = self.prefilling[slot]
+        req = st["req"]
+        start, size = st["plan"][st["next"]]
+        chunk = np.zeros((self.prefill_chunk,), np.int32)
+        chunk[:size] = req.prompt[start:start + size]
+        t0 = time.perf_counter()
+        with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
+            if start == 0:
+                logits, self.cache = self.chunk_first_fn(
+                    self.params, self.cache, jnp.asarray(chunk), slot, size)
+            else:
+                logits, self.cache = self.chunk_resume_fn(
+                    self.params, self.cache, jnp.asarray(chunk), slot,
+                    start + size, start)
+        self.prefill_chunk_time += time.perf_counter() - t0
+        self.prefill_chunks += 1
+        st["next"] += 1
+        if st["next"] < len(st["plan"]):
+            return
+        # final chunk: its logits are the whole prompt's last-token
+        # logits — regular admission from here on
+        del self.prefilling[slot]
+        self.prefill_forwards += 1
+        if self._finish_admit(slot, req, logits):
+            self.active[slot] = req
+            self.slot_age[slot] = 0
+        else:
+            self.completed.append(req)       # finished on its first token
+            self._free_pages(slot)
+
     def _fill_slots(self) -> None:
         """Admit work into free slots: restore suspended requests first
         (FIFO — they were admitted before anything still queued), then
@@ -727,7 +870,7 @@ class BatchedServer:
         if self.host_tier is not None:
             self._evict_for_demand()
         for s in range(self.batch):
-            if self.active[s] is not None:
+            if self.active[s] is not None or s in self.prefilling:
                 continue
             if restorable > 0 and self.suspended:
                 restorable -= 1
@@ -738,11 +881,19 @@ class BatchedServer:
                     self.completed.append(req)   # died while evicted
             elif self.queue:
                 req = self.queue.pop(0)
+                if self.prefill_chunk is not None \
+                        and len(req.prompt) > self.prefill_chunk:
+                    # long prompt: admit in chunks interleaved with the
+                    # decode segments (DESIGN.md §9) — the slot is
+                    # reserved but joins decode only after its last chunk
+                    self._begin_chunked(s, req)
+                    continue
                 self.active[s] = req
                 self.slot_age[s] = 0
                 if not self._admit(s, req):
                     self.completed.append(req)
                     self.active[s] = None
+                    self._free_pages(s)
 
     def _dispatch_rows(self, seg_len: int):
         """Slot accounting at dispatch time, where it is still possible:
@@ -767,7 +918,14 @@ class BatchedServer:
         one overlapped device_get later (`plain` is returned False; the
         caller dispatches the spec variant)."""
         rows: Dict[int, Any] = {}
-        plain = True
+        # plain segments write KV ring slots UNMASKED — harmless for a
+        # dead slot (its junk never outlives the next full prefill) but
+        # fatal for a slot mid-chunked-prefill, whose partial prefix must
+        # survive the interleaved segments.  The write-masked variant
+        # skips dead rows (write_mask=alive), so force it while any
+        # admission is between chunks (greedy bits are unchanged — the
+        # variants emit identical tokens, asserted by the churn suite).
+        plain = not self.prefilling
         for s in range(self.batch):
             req = self.active[s]
             if req is None:
@@ -795,6 +953,7 @@ class BatchedServer:
             if self.remaining[s] <= 0:
                 self.completed.append(req)
                 self.active[s] = None
+                self._free_pages(s)
         return rows, plain
 
     # -- per-token loop (bulk-synchronous baseline) ------------------------
@@ -806,6 +965,7 @@ class BatchedServer:
         speculative mode this is one draft-and-verify ROUND per dispatch
         (up to spec_k+1 tokens), still consumed synchronously."""
         self._fill_slots()
+        self._pump_prefill()       # <= one admission chunk per token step
         if all(r is None for r in self.active):
             return
         rows, plain = self._dispatch_rows(1)
@@ -865,6 +1025,11 @@ class BatchedServer:
                         self.steps += self.seg_len
                 self.segments_dispatched += 1
                 nxt_pending = (seg, emit, self.state, rows, alens)
+            # the scheduler's interleave point (DESIGN.md §9): at most one
+            # admission-prefill chunk per loop tick, dispatched AFTER the
+            # decode segment so it queues behind the in-flight streams —
+            # their segment cadence and decode_syncs stay untouched
+            self._pump_prefill()
             if pending is not None:
                 # ONE host sync per segment; overlaps the segment just
                 # dispatched above.
@@ -875,6 +1040,7 @@ class BatchedServer:
             if self.steps >= max_steps:
                 return          # step cap: remaining requests stay active
             if not self.queue and not self.suspended \
+                    and not self.prefilling \
                     and all(r is None for r in self.active):
                 return
 
@@ -933,12 +1099,13 @@ class BatchedServer:
                             req.spec_proposed = int(prop[s])
                         self.completed.append(req)
                         self.active[s] = None
+                        self._free_pages(s)
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         if self.stream:
             self.run_stream(max_steps)
             return
-        while (self.queue or self.suspended
+        while (self.queue or self.suspended or self.prefilling
                or any(r is not None for r in self.active)) \
                 and self.steps < max_steps:
             self.step()
@@ -990,6 +1157,13 @@ def main() -> int:
                          "eviction-eligible (the round-robin quantum)")
     ap.add_argument("--offload-chunks", type=int, default=2,
                     help="chunks per leaf for host<->device page streams")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV page size in sequence positions (DESIGN.md "
+                         "§9); default = the dense kernel's chunk size")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admit prompts longer than this in chunked "
+                         "prefills interleaved with decode segments "
+                         "(DESIGN.md §9)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -1000,7 +1174,9 @@ def main() -> int:
                            host_offload=args.offload,
                            prefix_cache=args.prefix_cache,
                            evict_after=args.evict_after,
-                           offload_chunks=args.offload_chunks)
+                           offload_chunks=args.offload_chunks,
+                           page_size=args.page_size,
+                           prefill_chunk=args.prefill_chunk)
     stops = (server.cfg.eos_token,) if args.stop_eos else ()
     sampled = (args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0
                or args.stop_eos)
@@ -1052,6 +1228,10 @@ def main() -> int:
         hits = server.prefix_hits_full + server.prefix_hits_partial
         offl += (f" prefix_hits={hits}/{hits + server.prefix_misses}"
                  f" prefill_skipped={server.prefill_tokens_skipped}tok")
+    if args.prefill_chunk is not None:
+        offl += (f" prefill_chunks={server.prefill_chunks}"
+                 f" pages={server.pages_allocated}alloc/"
+                 f"{server.pages_freed}freed")
     print(f"[serve] protocol={args.protocol} mode={mode} "
           f"sampling={'on' if sampled else 'greedy'} "
           f"requests={len(server.completed)} tokens={toks} "

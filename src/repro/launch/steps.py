@@ -593,6 +593,73 @@ def make_resume_prefill(cfg: ArchConfig):
     return resume
 
 
+class ChunkedPrefill(NamedTuple):
+    """The two jittable halves of chunked admission prefill plus its
+    chunk planner (DESIGN.md §9): `first` runs the opening chunk through
+    the ordinary one-shot prefill (length = the chunk's true length),
+    `resume` continues from the row's own freshly-written state exactly
+    as a prefix-cache partial hit would (two-partial attention merge +
+    SSD/conv state resume — PR 5 machinery, new caller), and `plan`
+    splits a prompt into the (start, size) chunk schedule."""
+    first: object      # (params, cache, chunk (C,), row, length)
+    resume: object     # (params, cache, chunk (C,), row, length, start)
+    plan: object       # (plen, chunk_size) -> [(start, size), ...]
+
+
+def make_chunked_prefill(cfg: ArchConfig):
+    """Chunk-resumable prompt prefill for the interleaved admission
+    scheduler (`BatchedServer(prefill_chunk=...)`): each chunk is one
+    bounded-latency jitted dispatch, so a 10k-token prompt admits as a
+    sequence of small forwards slotted BETWEEN decode segments instead
+    of one monolithic prefill that stalls every in-flight stream.
+
+    Chunk c covers prompt tokens [c*C, c*C + size); `first` handles
+    c = 0, `resume` every later chunk with start = c*C — by then the
+    row's cache already holds KV rows [0, start) and the post-prefix
+    recurrent state from the previous chunks, which is precisely the
+    restored-prefix precondition of `resume_prefill_into_cache`.  The
+    final chunk's logits are the whole prompt's last-token logits (its
+    `length` argument is the TRUE total prompt length).  Token-equal to
+    one-shot prefill, bitwise for pure-SSM rows (the PR 5 resume
+    property, asserted in tests/test_paged_cache.py).
+
+    Returns None for enc-dec archs (prompts keyed on audio frames;
+    resume is undefined there — admission stays one-shot)."""
+    model = get_model(cfg)
+    if model.resume_prefill is None:
+        return None
+    first = make_prefill_into_cache(cfg)
+    resume = make_resume_prefill(cfg)
+
+    def plan(plen: int, chunk_size: int):
+        assert chunk_size >= 1
+        return [(s, min(chunk_size, plen - s))
+                for s in range(0, plen, chunk_size)]
+
+    return ChunkedPrefill(first=first, resume=resume, plan=plan)
+
+
+def run_chunked_prefill(cp: ChunkedPrefill, params, cache, prompt,
+                        row, chunk_size: int):
+    """Drive a whole prompt through `cp` chunk-by-chunk (the test/bench
+    harness path; the server interleaves the same calls with decode
+    segments instead of looping).  prompt: (P,) int array at its TRUE
+    length.  Returns (last-token logits (V,), cache)."""
+    prompt = jnp.asarray(prompt, jnp.int32)
+    plen = int(prompt.shape[0])
+    logits = None
+    for start, size in cp.plan(plen, chunk_size):
+        padded = jnp.zeros((chunk_size,), jnp.int32)
+        padded = padded.at[:size].set(
+            jax.lax.dynamic_slice(prompt, (start,), (size,)))
+        if start == 0:
+            logits, cache = cp.first(params, cache, padded, row, size)
+        else:
+            logits, cache = cp.resume(params, cache, padded, row,
+                                      start + size, start)
+    return logits, cache
+
+
 def make_slot_page_fns(cfg: ArchConfig):
     """(extract, insert) for per-slot host-tier cache pages (§8):
     extract(cache, row[, upto]) -> {leaf: page}, insert(cache, pages,

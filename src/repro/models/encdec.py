@@ -156,7 +156,7 @@ def logits_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
 # --------------------------------------------------------------------------
 
 def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
-               enc_len: int = 0) -> Dict[str, Any]:
+               enc_len: int = 0, page_size=None) -> Dict[str, Any]:
     """Self-attention KV cache + precomputed per-layer cross KV.
 
     `enc_pos` is the per-slot ENCODER length clock: cross-attention at
@@ -164,8 +164,12 @@ def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
     serving a clip shorter than the cache's enc_len never reads the
     zero-padded (or stale) tail.  It defaults to the full enc_len, which
     keeps the whole-batch `prefill_cross_cache` path and existing decode
-    callers at the historical all-rows-valid behavior."""
-    cache = T.init_cache(cfg, batch_size, max_seq)
+    callers at the historical all-rows-valid behavior.
+
+    The decoder self-KV panels inherit the transformer page table
+    (DESIGN.md §9, `page_size` passthrough); cross-KV is written once
+    per admission and read whole, so it stays dense (unpaged)."""
+    cache = T.init_cache(cfg, batch_size, max_seq, page_size=page_size)
     dt = jnp.dtype(cfg.dtype)
     kh, hd = cfg.n_kv_heads, cfg.head_dim_
     enc_len = enc_len or cfg.enc_len
@@ -176,9 +180,10 @@ def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
 
 
 def abstract_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
-                   enc_len: int = 0) -> Dict[str, Any]:
+                   enc_len: int = 0, page_size=None) -> Dict[str, Any]:
     return jax.eval_shape(
-        functools.partial(init_cache, cfg, batch_size, max_seq, enc_len))
+        functools.partial(init_cache, cfg, batch_size, max_seq, enc_len,
+                          page_size=page_size))
 
 
 def _cross_kv(cfg: ArchConfig, cross_p: Params, enc_out: jax.Array
@@ -287,16 +292,30 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
 
     row = jnp.asarray(row, jnp.int32)
     out_cache = dict(cache)
+    pt = cache.get("page_table")
     for key, val in states.items():                         # (L,1,KH,*,hd)
         c = out_cache[key]
         if key.startswith("cross"):
             # write the FULL cross row: real K/V for the clip's e frames,
-            # zeros beyond — decode masks rows >= enc_pos[row] anyway
+            # zeros beyond — decode masks rows >= enc_pos[row] anyway.
+            # Cross-KV is unpaged (written once, read whole).
             assert e <= c.shape[3], (e, c.shape)
             val = jnp.pad(val, ((0, 0), (0, 0), (0, 0),
                                 (0, c.shape[3] - e), (0, 0)))
         else:
             assert p_len <= c.shape[3], (p_len, c.shape)
+            if pt is not None:
+                # decoder self-KV goes through the row's page table
+                # (DESIGN.md §9) — same scatter as the decoder-only
+                # prefill: non-adjacent advanced indices put the
+                # indexed dims first, so the value is (P, L, KH, hd)
+                ps = c.shape[3] // pt.shape[1]
+                prow = lax.dynamic_slice(pt, (row, 0), (1, pt.shape[1]))[0]
+                lrows = jnp.arange(p_len, dtype=jnp.int32)
+                phys = jnp.take(prow, lrows // ps) * ps + lrows % ps
+                out_cache[key] = c.at[:, row, :, phys, :].set(
+                    val.astype(c.dtype)[:, 0].transpose(2, 0, 1, 3))
+                continue
         out_cache[key] = lax.dynamic_update_slice(
             c, val.astype(c.dtype), (0, row, 0, 0, 0))
     out_cache["enc_pos"] = cache["enc_pos"].at[row].set(e)
@@ -336,8 +355,10 @@ def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     b, t, _ = x.shape
     pos = jnp.asarray(positions, jnp.int32)
     cross_pos = jnp.asarray(cache["enc_pos"], jnp.int32) - 1
+    pages = cache.get("page_table")
 
-    cache_keys = sorted(k for k in cache if k not in ("pos", "enc_pos"))
+    cache_keys = sorted(k for k in cache
+                        if k not in ("pos", "enc_pos", "page_table"))
     xs_cache = {k: cache[k] for k in cache_keys}
 
     def scan_body(x, inp):
@@ -347,7 +368,8 @@ def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
             p = bp[pos_i]
             x, knew, vnew = T._verify_attn(
                 cfg, p["attn"], x, kind,
-                blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos)
+                blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos,
+                pages)
             updates[f"knew{pos_i}"] = knew                    # (B,T,KH,hd)
             updates[f"vnew{pos_i}"] = vnew
             hx = L.rms_norm(x, cross_p["ln"], cfg.norm_eps)
@@ -370,11 +392,13 @@ def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
                                  "cross_k": cache["cross_k"],
                                  "cross_v": cache["cross_v"],
                                  "enc_pos": cache["enc_pos"]}
+    if pages is not None:
+        out_cache["page_table"] = pages
     for pos_i in range(len(cfg.block_pattern)):
         out_cache[f"k{pos_i}"] = T.verify_kv_update(
-            cache[f"k{pos_i}"], ys[f"knew{pos_i}"], pos, write_mask)
+            cache[f"k{pos_i}"], ys[f"knew{pos_i}"], pos, write_mask, pages)
         out_cache[f"v{pos_i}"] = T.verify_kv_update(
-            cache[f"v{pos_i}"], ys[f"vnew{pos_i}"], pos, write_mask)
+            cache[f"v{pos_i}"], ys[f"vnew{pos_i}"], pos, write_mask, pages)
     return constrain(logits, "logits"), out_cache, {}
 
 
@@ -396,7 +420,8 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     caches as xs and emits only the tiny new-token self-attn K/V; the
     (static) cross KV never round-trips through scan ys at all."""
     from repro.core.backstream import (cache_update_stacked,
-                                       decode_attention_combined)
+                                       decode_attention_combined,
+                                       physical_slots)
     x = jnp.take(params["embed"], tokens, axis=0)
     b = x.shape[0]
     pos = cache["pos"] if positions is None \
@@ -404,8 +429,10 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     # per-row last valid cross slot; enc_pos is per-SLOT (B,), not
     # per-layer — it rides the scan closure, not the xs
     cross_pos = jnp.asarray(cache["enc_pos"], jnp.int32) - 1
+    pages = cache.get("page_table")
 
-    cache_keys = sorted(k for k in cache if k not in ("pos", "enc_pos"))
+    cache_keys = sorted(k for k in cache
+                        if k not in ("pos", "enc_pos", "page_table"))
     xs_cache = {k: cache[k] for k in cache_keys}
 
     def scan_body(x, inp):
@@ -415,7 +442,8 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
             p = bp[pos_i]
             x, knew, vnew = T._decode_attn(
                 cfg, p["attn"], x, kind,
-                blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos)
+                blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos,
+                pages)
             updates[f"knew{pos_i}"] = knew
             updates[f"vnew{pos_i}"] = vnew
             # cross attention against the (static) encoder KV
@@ -437,9 +465,15 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
                                  "cross_k": cache["cross_k"],
                                  "cross_v": cache["cross_v"],
                                  "enc_pos": cache["enc_pos"]}
+    if pages is not None:
+        out_cache["page_table"] = pages
     for pos_i, kind in enumerate(cfg.block_pattern):
         max_seq = cache[f"k{pos_i}"].shape[3]
         slot = (pos % max_seq).astype(jnp.int32)
+        if pages is not None:
+            slot = physical_slots(
+                pages, jnp.broadcast_to(slot.reshape(-1), (b,)),
+                max_seq // pages.shape[1])
         if write_mask is not None:
             slot = jnp.broadcast_to(slot.reshape(-1), (b,))
             knew = T.masked_kv_update(cache[f"k{pos_i}"],

@@ -288,15 +288,38 @@ class CacheSpec:
     kind: str
 
 
+def default_page_size(max_seq: int) -> int:
+    """The KV page size used when none is requested: the largest divisor
+    of max_seq not above 128 — the SAME divisor rule the dense fused
+    decode kernel uses to pick its chunk size `blk_c`, so the identity
+    page table reproduces the dense kernel's grid (and therefore its
+    bits) exactly (DESIGN.md §9: chunk-as-page equivalence)."""
+    ps = max(1, min(128, max_seq))
+    while max_seq % ps:
+        ps -= 1
+    return ps
+
+
 def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
-               dtype: Optional[str] = None) -> Dict[str, Any]:
-    """Per-pattern-position caches stacked over n_blocks."""
+               dtype: Optional[str] = None,
+               page_size: Optional[int] = None) -> Dict[str, Any]:
+    """Per-pattern-position caches stacked over n_blocks.
+
+    Caches with attention layers also carry a `"page_table"` leaf
+    (B, n_pages) int32 — per-row physical-page indices for the
+    block-sparse KV pages of DESIGN.md §9.  Logical KV row `r` of batch
+    row `b` lives at physical row `table[b, r // page] * page + r % page`
+    of the SAME dense (B, KH, S, hd) panels; the identity table (the
+    init value here) makes every paged code path bitwise the dense one.
+    `page_size` must divide max_seq (default: `default_page_size`)."""
     dt = jnp.dtype(dtype or cfg.dtype)
     nb, b = cfg.n_blocks, batch_size
     kh, hd = cfg.n_kv_heads, cfg.head_dim_
     cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    has_attn = False
     for pos, kind in enumerate(cfg.block_pattern):
         if kind in ("full", "local"):
+            has_attn = True
             # flash-decoding layout (B, KH, S, hd): contiguous (S, hd)
             # panels per kv head — decode dots read the cache in place
             # (§Perf iteration D2)
@@ -308,17 +331,34 @@ def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
             cache[f"ssm{pos}"] = jnp.zeros(
                 (nb, b, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
                 jnp.float32)
+    if has_attn:
+        ps = page_size or default_page_size(max_seq)
+        assert max_seq % ps == 0, (max_seq, ps)
+        cache["page_table"] = jnp.tile(
+            jnp.arange(max_seq // ps, dtype=jnp.int32)[None], (b, 1))
     return cache
 
 
-def abstract_cache(cfg: ArchConfig, batch_size: int, max_seq: int
-                   ) -> Dict[str, Any]:
+def abstract_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
+                   page_size: Optional[int] = None) -> Dict[str, Any]:
     return jax.eval_shape(
-        functools.partial(init_cache, cfg, batch_size, max_seq))
+        functools.partial(init_cache, cfg, batch_size, max_seq,
+                          page_size=page_size))
+
+
+def cache_page_size(cache: Dict[str, Any]) -> int:
+    """Static page size of a cache with a page table: seq axis of any
+    self-KV leaf over the table's page count."""
+    pt = cache["page_table"]
+    for key, leaf in cache.items():
+        if _is_self_kv(key):
+            return leaf.shape[3] // pt.shape[1]
+    raise ValueError("cache has a page_table but no self-KV leaves")
 
 
 def _decode_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
                  k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array,
+                 pages: Optional[jax.Array] = None,
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-token attention against the cache.  The cache is sharded over the
     sequence axis (flash-decoding): each shard produces a partial-softmax
@@ -334,8 +374,10 @@ def _decode_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
     contribution is merged as one extra partial (its KV has not been
     written yet), and the returned (k_new, v_new) are ring-slot-written
     for all layers at once OUTSIDE the layer scan — so the scan never
-    re-stacks full cache slices.  Returns (x, k_new, v_new) with
-    k_new/v_new in cache layout (B, KH, 1, hd)."""
+    re-stacks full cache slices.  `pages`: optional (B, n_pages) page
+    table — the cache read then goes through per-row page indirection
+    (DESIGN.md §9); `pos` keeps its logical meaning.  Returns
+    (x, k_new, v_new) with k_new/v_new in cache layout (B, KH, 1, hd)."""
     from repro.core.backstream import decode_attention_combined
     b = x.shape[0]
     if pos.ndim == 0:
@@ -347,7 +389,8 @@ def _decode_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
     window = cfg.sliding_window if kind == "local" else 0
     # cache holds tokens [0, pos); the current token arrives via `extra`
     o = decode_attention_combined(q, k_cache, v_cache, pos - 1,
-                                  window=max(0, window - 1), extra=extra)
+                                  window=max(0, window - 1), extra=extra,
+                                  pages=pages)
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim_)
     return (x + o @ p["wo"], k_new.transpose(0, 2, 1, 3),
             v_new.transpose(0, 2, 1, 3))
@@ -391,16 +434,25 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     into the stacked caches in ONE sharded update per cache after the
     scan (§Perf iteration D5) — the scan never re-stacks cache slices.
     The write mask is applied to those tiny per-layer updates (a gather
-    of the old slot values + select), never to the full cache arrays."""
-    from repro.core.backstream import cache_update_stacked
+    of the old slot values + select), never to the full cache arrays.
+
+    Paged caches (a `"page_table"` leaf, DESIGN.md §9): reads go through
+    per-row page indirection inside the attention call, and the ring
+    slot of every KV write is translated logical→physical through the
+    table first.  Position clocks, validity and the write mask all stay
+    logical — the table only relocates bytes."""
+    from repro.core.backstream import cache_update_stacked, physical_slots
     if tokens.ndim == 3:
         x = tokens.astype(jnp.dtype(cfg.dtype))
     else:
         x = jnp.take(params["embed"], tokens, axis=0)
     pos = cache["pos"] if positions is None \
         else jnp.asarray(positions, jnp.int32)
+    pages = cache.get("page_table")
 
-    cache_keys = sorted(k for k in cache if k != "pos")
+    # page_table rides the closure, not the layer scan: its leading axis
+    # is B, not n_blocks, and it is identical for every layer
+    cache_keys = sorted(k for k in cache if k not in ("pos", "page_table"))
     xs = {k: cache[k] for k in cache_keys}
 
     def scan_body(x, inp):
@@ -411,7 +463,8 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
             if kind in ("full", "local"):
                 x, knew, vnew = _decode_attn(
                     cfg, p["attn"], x, kind,
-                    blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos)
+                    blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos,
+                    pages)
                 updates[f"knew{pos_i}"] = knew
                 updates[f"vnew{pos_i}"] = vnew
             elif kind == "mamba":
@@ -430,10 +483,19 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
 
     b = x.shape[0]
     out_cache: Dict[str, Any] = {"pos": cache["pos"] + 1}
+    if pages is not None:
+        out_cache["page_table"] = pages
     for pos_i, kind in enumerate(cfg.block_pattern):
         if kind in ("full", "local"):
             max_seq = cache[f"k{pos_i}"].shape[3]
             slot = (pos % max_seq).astype(jnp.int32)
+            if pages is not None:
+                # logical ring slot → physical row through the table;
+                # masked-row old-value gathers below must read the SAME
+                # physical slot the scatter targets
+                slot = physical_slots(
+                    pages, jnp.broadcast_to(slot.reshape(-1), (b,)),
+                    max_seq // pages.shape[1])
             if write_mask is not None:
                 # per-row ring write; masked rows re-write their slot's
                 # OLD value (token-sized gather+select, not a full-cache
@@ -464,6 +526,7 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
 
 def _verify_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
                  k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array,
+                 pages: Optional[jax.Array] = None,
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """T-position attention for the speculative verify forward
     (DESIGN.md §7): x is (B, T, D) — the current token plus T-1 draft
@@ -485,12 +548,17 @@ def _verify_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
     Returns (x, k_new, v_new) with k_new/v_new (B, T, KH, hd) — the
     caller ring-writes them outside the layer scan (§Perf iteration D5
     discipline, as in decode_step)."""
-    from repro.core.backstream import decode_attention_combined
+    from repro.core.backstream import decode_attention_combined, \
+        physical_slots
     b, t, _ = x.shape
     s = k_cache.shape[2]
     positions = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None]
     q, k_new, v_new = _qkv(cfg, p, x, positions)
     slots = positions % s                                     # (B,T)
+    if pages is not None:
+        # the local scatter must land where the paged READ will look:
+        # translate the logical ring slots through the row's table
+        slots = physical_slots(pages, slots, s // pages.shape[1])
     bidx = jnp.arange(b)[:, None]
     # advanced-index scatter: (bidx, slots) broadcast to (B,T), so the
     # target slice is (B,T,KH,hd) — k_new/v_new's native layout
@@ -503,7 +571,7 @@ def _verify_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
                                     v_new[:, j:j + 1])
         outs.append(decode_attention_combined(
             q[:, j:j + 1], kc, vc, pos + j - 1,
-            window=max(0, window - 1), extra=extra))
+            window=max(0, window - 1), extra=extra, pages=pages))
     o = jnp.concatenate(outs, axis=1)                         # (B,T,H,hd)
     o = o.reshape(b, t, cfg.n_heads * cfg.head_dim_)
     return x + o @ p["wo"], k_new, v_new
@@ -584,8 +652,9 @@ def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     x = jnp.take(params["embed"], tokens, axis=0)             # (B,T,D)
     pos = jnp.asarray(positions, jnp.int32)
     b, t, _ = x.shape
+    pages = cache.get("page_table")
 
-    cache_keys = sorted(k for k in cache if k != "pos")
+    cache_keys = sorted(k for k in cache if k not in ("pos", "page_table"))
     xs = {k: cache[k] for k in cache_keys}
 
     def scan_body(x, inp):
@@ -596,7 +665,8 @@ def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
             if kind in ("full", "local"):
                 x, knew, vnew = _verify_attn(
                     cfg, p["attn"], x, kind,
-                    blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos)
+                    blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos,
+                    pages)
                 updates[f"knew{pos_i}"] = knew                # (B,T,KH,hd)
                 updates[f"vnew{pos_i}"] = vnew
             elif kind == "mamba":
@@ -614,13 +684,17 @@ def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
 
     out_cache: Dict[str, Any] = {"pos": cache["pos"] + t}
+    if pages is not None:
+        out_cache["page_table"] = pages
     snaps: Dict[str, Any] = {}
     for pos_i, kind in enumerate(cfg.block_pattern):
         if kind in ("full", "local"):
             out_cache[f"k{pos_i}"] = verify_kv_update(
-                cache[f"k{pos_i}"], ys[f"knew{pos_i}"], pos, write_mask)
+                cache[f"k{pos_i}"], ys[f"knew{pos_i}"], pos, write_mask,
+                pages)
             out_cache[f"v{pos_i}"] = verify_kv_update(
-                cache[f"v{pos_i}"], ys[f"vnew{pos_i}"], pos, write_mask)
+                cache[f"v{pos_i}"], ys[f"vnew{pos_i}"], pos, write_mask,
+                pages)
         elif kind == "mamba":
             for key in (f"conv{pos_i}", f"ssm{pos_i}"):
                 out_cache[key] = cache[key]
@@ -629,16 +703,23 @@ def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
 
 
 def verify_kv_update(cache: jax.Array, new: jax.Array, pos: jax.Array,
-                     write_mask: Optional[jax.Array]) -> jax.Array:
+                     write_mask: Optional[jax.Array],
+                     pages: Optional[jax.Array] = None) -> jax.Array:
     """Ring-write T consecutive per-row K/V rows into a stacked cache —
     the T-token generalization of `cache_update_stacked` +
     `masked_kv_update`.  cache: (L,B,KH,S,hd); new: (L,B,T,KH,hd)
     (layer-scan ys layout); pos: (B,) slot of row 0; write_mask: (B,)
     bool or None — masked rows re-write their old values (token-sized
-    gather+select, never a full-cache where)."""
+    gather+select, never a full-cache where).  `pages`: optional
+    (B, n_pages) table — the T logical ring slots are then translated
+    to physical rows before the scatter (and the masked-row old-value
+    gather, which must read the same physical rows)."""
+    from repro.core.backstream import physical_slots
     l, b, kh, s, hd = cache.shape
     t = new.shape[2]
     slots = (pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None]) % s
+    if pages is not None:
+        slots = physical_slots(pages, slots, s // pages.shape[1])
     bidx = jnp.arange(b)[:, None]
     val = new.astype(cache.dtype).transpose(1, 2, 0, 3, 4)    # (B,T,L,KH,hd)
     if write_mask is not None:
@@ -764,6 +845,7 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
 
     row = jnp.asarray(row, jnp.int32)
     out_cache = dict(cache)
+    pt = cache.get("page_table")
     for pos_i, kind in enumerate(cfg.block_pattern):
         if kind in ("full", "local"):
             max_seq = cache[f"k{pos_i}"].shape[3]
@@ -774,8 +856,21 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
         for key in keys:
             c = cache[key]
             upd = states[key].astype(c.dtype)
-            out_cache[key] = lax.dynamic_update_slice(
-                c, upd, (0, row) + (0,) * (c.ndim - 2))
+            if pt is not None and _is_self_kv(key):
+                # scatter the P prompt rows through row's page table:
+                # logical row r → physical table[row, r//ps]*ps + r%ps
+                # (DESIGN.md §9).  Advanced indices (row at axis 1, phys
+                # at axis 3) are non-adjacent, so the indexed dims move
+                # to the front: the set value is (P, L, KH, hd).
+                ps = max_seq // pt.shape[1]
+                prow = lax.dynamic_slice(pt, (row, 0), (1, pt.shape[1]))[0]
+                lrows = jnp.arange(p_len, dtype=jnp.int32)
+                phys = jnp.take(prow, lrows // ps) * ps + lrows % ps
+                out_cache[key] = c.at[:, row, :, phys, :].set(
+                    upd[:, 0].transpose(2, 0, 1, 3))
+            else:
+                out_cache[key] = lax.dynamic_update_slice(
+                    c, upd, (0, row) + (0,) * (c.ndim - 2))
     return logits, out_cache
 
 
@@ -799,15 +894,27 @@ def extract_slot_cache(cfg: ArchConfig, cache: Dict[str, Any],
     batch axis at position 1; the 1-dim `enc_pos` clock is sliced on
     axis 0; the scalar `pos` counter is per-BATCH bookkeeping of the
     single-sequence path and is excluded (per-slot serving never reads
-    it).  `upto` (static) truncates self-attention KV leaves to their
-    first `upto` sequence rows — the prefix-page slice; by causality
-    those rows depend only on prompt tokens [0, upto), so a stored
-    prefix page is exact for ANY continuation.  `row` may be traced
-    (one jit trace serves every slot)."""
+    it), as is the `page_table` leaf — physical placement is a property
+    of the batch the slot sits in, not of the request.
+
+    Paged caches (DESIGN.md §9): self-attention KV leaves come out as
+    6-dim PAGE SETS (L, 1, KH, n_pages, page, hd), pages gathered in
+    LOGICAL order — the extract is placement-independent, so the host
+    tier moves page sets without repacking and `insert_slot_cache` can
+    scatter them through ANY destination row's table.  `upto` (static)
+    truncates self-attention KV leaves to their first `upto` sequence
+    rows — the prefix-page slice; by causality those rows depend only
+    on prompt tokens [0, upto), so a stored prefix page is exact for
+    ANY continuation.  On a paged cache the cut rounds UP to whole
+    pages (ceil(upto / page) pages); the sub-page junk tail is
+    invisible under the resume validity `slot < start`, the same
+    junk-beyond-clock argument as padded-prompt prefill.  `row` may be
+    traced (one jit trace serves every slot)."""
     row = jnp.asarray(row, jnp.int32)
+    pt = cache.get("page_table")
     out: Dict[str, Any] = {}
     for key, leaf in cache.items():
-        if key == "pos":
+        if key in ("pos", "page_table"):
             continue
         if leaf.ndim == 1:                            # enc_pos (B,)
             out[key] = lax.dynamic_slice(leaf, (row,), (1,))
@@ -815,7 +922,16 @@ def extract_slot_cache(cfg: ArchConfig, cache: Dict[str, Any],
         sizes = (leaf.shape[0], 1) + leaf.shape[2:]
         sl = lax.dynamic_slice(
             leaf, (0, row) + (0,) * (leaf.ndim - 2), sizes)
-        if upto is not None and _is_self_kv(key):
+        if _is_self_kv(key) and pt is not None:
+            n_p = pt.shape[1]
+            l, _, kh, s, hd = leaf.shape
+            ps = s // n_p
+            prow = lax.dynamic_slice(pt, (row, 0), (1, n_p))[0]  # (n_p,)
+            slr = sl.reshape(l, 1, kh, n_p, ps, hd)
+            sl = jnp.take(slr, prow, axis=3)          # logical page order
+            if upto is not None:
+                sl = sl[:, :, :, :-(-upto // ps)]     # ceil to whole pages
+        elif upto is not None and _is_self_kv(key):
             sl = sl[:, :, :, :upto]
         out[key] = sl
     return out
@@ -832,14 +948,43 @@ def insert_slot_cache(cfg: ArchConfig, cache: Dict[str, Any],
     clock until ring writes overwrite it (the same junk-beyond-clock
     argument as padded-prompt prefill).  Inverse of
     `extract_slot_cache` leaf-for-leaf (bitwise: pure data movement,
-    asserted in tests/test_cache_offload.py)."""
+    asserted in tests/test_cache_offload.py).
+
+    Paged caches (DESIGN.md §9): 6-dim self-KV page sets (logical page
+    order, see `extract_slot_cache`) are scattered through the
+    DESTINATION row's page table — logical page i of the set lands at
+    physical page table[row, i] — so a page set extracted under one
+    placement restores exactly under any other.  A legacy 5-dim dense
+    self-KV leaf is likewise routed row-by-row through the table."""
     row = jnp.asarray(row, jnp.int32)
+    pt = cache.get("page_table")
     out = dict(cache)
     for key, val in leaves.items():
         c = cache[key]
         val = jnp.asarray(val).astype(c.dtype)
         if c.ndim == 1:
             out[key] = lax.dynamic_update_slice(c, val, (row,))
+        elif _is_self_kv(key) and pt is not None:
+            l, b, kh, s, hd = c.shape
+            n_p = pt.shape[1]
+            ps = s // n_p
+            prow = lax.dynamic_slice(pt, (row, 0), (1, n_p))[0]   # (n_p,)
+            if val.ndim == 6:
+                # page set: scatter whole pages through the dest table.
+                # Advanced indices (row at axis 1, dest pages at axis 3)
+                # are non-adjacent → indexed dims lead: value is
+                # (n_sel, L, KH, page, hd).
+                n_sel = val.shape[3]
+                cr = c.reshape(l, b, kh, n_p, ps, hd)
+                cr = cr.at[:, row, :, prow[:n_sel], :, :].set(
+                    val[:, 0].transpose(2, 0, 1, 3, 4))
+                out[key] = cr.reshape(l, b, kh, s, hd)
+            else:
+                u = val.shape[3]
+                lrows = jnp.arange(u, dtype=jnp.int32)
+                phys = jnp.take(prow, lrows // ps) * ps + lrows % ps
+                out[key] = c.at[:, row, :, phys, :].set(
+                    val[:, 0].transpose(2, 0, 1, 3))
         else:
             out[key] = lax.dynamic_update_slice(
                 c, val, (0, row) + (0,) * (c.ndim - 2))
@@ -972,7 +1117,10 @@ def resume_prefill_into_cache(cfg: ArchConfig, params: Params,
     suffix_len = jnp.asarray(length, jnp.int32) - start
     x = jnp.take(params["embed"], tokens[None], axis=0)   # (1,Ps,D)
     positions = (start + jnp.arange(t_len, dtype=jnp.int32))[None]
-    # the slot's restored pages ride the layer scan as READ-ONLY xs
+    # the slot's restored pages ride the layer scan as READ-ONLY xs; on
+    # a paged cache the self-KV leaves arrive as 6-dim page sets in
+    # LOGICAL order, so collapsing (n_pages, page) → S recovers the
+    # logical-dense row the two-partial merge expects (DESIGN.md §9)
     row_cache = extract_slot_cache(cfg, cache, row)
 
     def scan_body(x, inp):
@@ -983,8 +1131,14 @@ def resume_prefill_into_cache(cfg: ArchConfig, params: Params,
             if kind in ("full", "local"):
                 q, k, v = _qkv(cfg, p["attn"], x, positions)
                 window = cfg.sliding_window if kind == "local" else 0
-                o = _resume_attention(cfg, q, k, v, blk_row[f"k{pos_i}"],
-                                      blk_row[f"v{pos_i}"], start, window)
+                k_row, v_row = blk_row[f"k{pos_i}"], blk_row[f"v{pos_i}"]
+                if k_row.ndim == 5:                   # (1,KH,n_p,ps,hd)
+                    k_row = k_row.reshape(k_row.shape[:2] + (-1,)
+                                          + k_row.shape[4:])
+                    v_row = v_row.reshape(v_row.shape[:2] + (-1,)
+                                          + v_row.shape[4:])
+                o = _resume_attention(cfg, q, k, v, k_row, v_row,
+                                      start, window)
                 x = x + o.reshape(1, t_len, -1) @ p["attn"]["wo"]
                 states[f"k{pos_i}"] = k.transpose(0, 2, 1, 3)
                 states[f"v{pos_i}"] = v.transpose(0, 2, 1, 3)
@@ -1004,13 +1158,26 @@ def resume_prefill_into_cache(cfg: ArchConfig, params: Params,
     logits = jnp.einsum("bsd,vd->bsv", x_last, params["embed"])[0, 0]
 
     out_cache = dict(cache)
+    pt = cache.get("page_table")
     for pos_i, kind in enumerate(cfg.block_pattern):
         if kind in ("full", "local"):
-            # suffix KV rows land at sequence offset `start`
+            # suffix KV rows land at logical sequence offset `start`
             for key in (f"k{pos_i}", f"v{pos_i}"):
                 c = cache[key]
-                out_cache[key] = lax.dynamic_update_slice(
-                    c, states[key].astype(c.dtype), (0, row, 0, start, 0))
+                if pt is not None:
+                    s = c.shape[3]
+                    ps = s // pt.shape[1]
+                    prow = lax.dynamic_slice(
+                        pt, (row, 0), (1, pt.shape[1]))[0]
+                    lrows = start + jnp.arange(t_len, dtype=jnp.int32)
+                    phys = jnp.take(prow, lrows // ps) * ps + lrows % ps
+                    out_cache[key] = c.at[:, row, :, phys, :].set(
+                        states[key].astype(c.dtype)[:, 0]
+                        .transpose(2, 0, 1, 3))
+                else:
+                    out_cache[key] = lax.dynamic_update_slice(
+                        c, states[key].astype(c.dtype),
+                        (0, row, 0, start, 0))
         else:
             for key in (f"conv{pos_i}", f"ssm{pos_i}"):
                 c = cache[key]

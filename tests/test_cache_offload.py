@@ -48,16 +48,24 @@ def _kind(key: str) -> str:
     return key.rstrip("0123456789")
 
 
-def _filled_cache(fns, cfg, batch, max_seq, seed=1):
+def _filled_cache(fns, cfg, batch, max_seq, seed=1, page_size=None):
     """A decode cache with random (per-dtype) contents in every leaf, so
-    a round-trip mismatch cannot hide in zeros."""
-    cache = fns.init_cache(cfg, batch, max_seq)
+    a round-trip mismatch cannot hide in zeros.  The page table (when
+    the family has one) becomes a random PER-ROW PERMUTATION — not
+    random ints, which could alias pages — so paged extract/insert runs
+    under scrambled physical placement, not the identity."""
+    cache = fns.init_cache(cfg, batch, max_seq, page_size=page_size)
     key = jax.random.PRNGKey(seed)
+    rng = np.random.default_rng(seed)
     out = {}
     for k, v in cache.items():
         key, sub = jax.random.split(key)
         if k == "pos":
             out[k] = v
+        elif k == "page_table":
+            out[k] = jnp.asarray(
+                np.stack([rng.permutation(v.shape[1])
+                          for _ in range(v.shape[0])]), jnp.int32)
         elif jnp.issubdtype(v.dtype, jnp.floating):
             out[k] = jax.random.normal(sub, v.shape).astype(v.dtype)
         else:
@@ -70,10 +78,13 @@ def _filled_cache(fns, cfg, batch, max_seq, seed=1):
 def test_slot_page_round_trip_bitwise(arch, chunks):
     """extract -> host (chunked async) -> device -> insert is bitwise for
     every leaf kind, touches only the target row, and covers the
-    family's full leaf-kind set."""
+    family's full leaf-kind set.  Runs under a scrambled page table
+    (DESIGN.md §9): extract gathers pages into logical order, insert
+    scatters them back through the destination row's table, so the
+    round trip restores the exact physical bytes without repacking."""
     cfg = get_smoke_config(arch)
     fns = get_model(cfg)
-    filled = _filled_cache(fns, cfg, batch=3, max_seq=16)
+    filled = _filled_cache(fns, cfg, batch=3, max_seq=16, page_size=4)
     leaves = fns.extract_slot(cfg, filled, 1, None)
     assert {_kind(k) for k in leaves} == EXPECTED_KINDS[arch], arch
 
@@ -83,11 +94,13 @@ def test_slot_page_round_trip_bitwise(arch, chunks):
     assert snap.nbytes == sum(a.nbytes for a in host.values())
     restored = BS.stream_offload_to_device(host, chunks=chunks)
 
-    zero = {k: (v if k == "pos" else jnp.zeros_like(v))
+    # the page table is placement bookkeeping of the BATCH, not request
+    # state: it stays put (like `pos`) while the leaves are zeroed
+    zero = {k: (v if k in ("pos", "page_table") else jnp.zeros_like(v))
             for k, v in filled.items()}
     back = fns.insert_slot(cfg, zero, restored, 1)
     for k in filled:
-        if k == "pos":
+        if k in ("pos", "page_table"):
             continue
         a, b = np.asarray(filled[k]), np.asarray(back[k])
         if a.ndim >= 2:
@@ -98,20 +111,55 @@ def test_slot_page_round_trip_bitwise(arch, chunks):
         assert not others.any(), (arch, k, "wrote outside the slot row")
 
 
+def test_page_set_moves_across_placements():
+    """A page set extracted under one physical placement restores
+    bitwise under a DIFFERENT destination table — the no-repacking
+    property that makes pages the host tier's native unit (DESIGN.md
+    §9): the set is stored in logical order, so only the destination
+    scatter consults a table."""
+    cfg = get_smoke_config("starcoder2_3b")
+    fns = get_model(cfg)
+    src = _filled_cache(fns, cfg, batch=2, max_seq=16, page_size=4, seed=1)
+    dst = _filled_cache(fns, cfg, batch=2, max_seq=16, page_size=4, seed=2)
+    assert not np.array_equal(np.asarray(src["page_table"]),
+                              np.asarray(dst["page_table"]))
+    leaves = fns.extract_slot(cfg, src, 0, None)
+    host = BS.stream_offload_to_host(leaves, chunks=2).materialize()
+    back = fns.insert_slot(cfg, dst, BS.stream_offload_to_device(host), 1)
+    # logical content equality: gather both rows through their tables
+    for k in src:
+        if _kind(k) not in ("k", "v"):
+            continue
+        ps = 4
+        ta = np.asarray(src["page_table"])[0]
+        tb = np.asarray(dst["page_table"])[1]
+        a = np.asarray(src[k])[:, 0]          # (L,KH,S,hd) physical
+        b = np.asarray(back[k])[:, 1]
+        ar = a.reshape(a.shape[0], a.shape[1], -1, ps, a.shape[3])
+        br = b.reshape(*ar.shape)
+        assert np.array_equal(ar[:, :, ta], br[:, :, tb]), k
+
+
 @pytest.mark.parametrize("arch", ["starcoder2_3b", "whisper_large_v3"])
 def test_kv_page_upto_truncation(arch):
     """`upto` bounds self-attention KV pages to the valid prefix (the
     prefix-cache page width) while leaving every other leaf whole —
-    enc-dec cross-KV is keyed on frames, not prompt tokens."""
+    enc-dec cross-KV is keyed on frames, not prompt tokens.  On a paged
+    cache the cut rounds up to whole pages (ceil(upto / page)) and the
+    extracted set is in LOGICAL page order regardless of placement."""
     cfg = get_smoke_config(arch)
     fns = get_model(cfg)
-    filled = _filled_cache(fns, cfg, batch=2, max_seq=16)
+    ps = 4
+    filled = _filled_cache(fns, cfg, batch=2, max_seq=16, page_size=ps)
     leaves = fns.extract_slot(cfg, filled, 0, 8)
+    table = np.asarray(filled["page_table"])[0]
     for k, v in leaves.items():
         if _kind(k) in ("k", "v"):
-            assert v.shape[3] == 8, (k, v.shape)
-            full = np.asarray(filled[k])[:, 0:1, :, :8]
-            assert np.array_equal(np.asarray(v), full), k
+            assert v.shape[3:5] == (2, ps), (k, v.shape)   # ceil(8/4) pages
+            c = np.asarray(filled[k])[:, 0:1]              # (L,1,KH,16,hd)
+            cr = c.reshape(c.shape[0], 1, c.shape[2], -1, ps, c.shape[4])
+            logical = cr[:, :, :, table]                   # logical order
+            assert np.array_equal(np.asarray(v), logical[:, :, :, :2]), k
         elif np.asarray(v).ndim >= 3 and _kind(k) in ("cross_k", "cross_v"):
             assert v.shape[3] == cfg.enc_len, (k, v.shape)
 
@@ -324,7 +372,7 @@ def test_resume_prefill_matches_full_prefill(arch):
     if arch == "mamba2_370m":
         assert np.array_equal(la, lb), "SSM resume must be bitwise"
     for k in cache_a:
-        if k == "pos":
+        if k in ("pos", "page_table"):
             continue
         a, b = np.asarray(cache_a[k]), np.asarray(cache_b[k])
         if _kind(k) in ("k", "v"):

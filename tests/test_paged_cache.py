@@ -1,0 +1,315 @@
+"""Block-sparse KV paging property suite (DESIGN.md §9).
+
+The page table's correctness hinge is CHUNK-AS-PAGE EQUIVALENCE: a page
+is exactly one Pallas-grid chunk of the fused decode kernel, key
+positions stay LOGICAL inside the kernel body, and the per-row page list
+only redirects which physical chunk each grid step reads — so the paged
+kernel performs the SAME floating-point operations in the SAME order as
+the dense kernel over a logically-gathered cache, and the results are
+BITWISE equal for ANY physical placement (permutation, fragmentation,
+over-provisioned physical pages, ragged per-row page counts).
+
+Tiers:
+  * kernel      — fused paged decode vs dense fused twin (bitwise) and
+                  the pure-jnp oracle (allclose), across all 11
+                  registered configs' attention geometries;
+  * hypothesis  — random page size / fragmentation / permutations /
+                  per-row valid-page counts (skipped without hypothesis,
+                  with a deterministic twin that always runs);
+  * serve       — identity vs shuffled page tables through the REAL
+                  serving stack: all 4 architecture families, both drive
+                  loops, greedy + fixed-seed stochastic rows, bitwise;
+  * chunked     — `prefill_chunk` admission equals one-shot admission
+                  for greedy streams, with page-ledger closure.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.kernels import flash_attention as fa
+from repro.kernels import ref
+
+SERVE_ARCHES = [            # one per architecture family
+    "starcoder2_3b",        # decoder-only attention
+    "mamba2_370m",          # pure SSM (no page table — the degenerate tier)
+    "jamba_1_5_large",      # hybrid attention/mamba
+    "whisper_large_v3",     # enc-dec (paged self-KV, dense cross-KV)
+]
+
+
+def _rand_kv(key, b, kh, s, hd, h):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kh, s, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kh, s, hd), jnp.float32)
+    return q, k, v
+
+
+def _paged_vs_dense(q, k_phys, v_phys, pos, pages, ps, *, window=0):
+    """The equivalence core: paged fused decode on the PHYSICAL cache vs
+    the dense fused twin on the logically-gathered cache — bitwise — and
+    the pure-jnp oracle — allclose."""
+    k_log = ref.gather_kv_pages(k_phys, pages, ps)
+    v_log = ref.gather_kv_pages(v_phys, pages, ps)
+    paged = np.asarray(fa.decode_attention_fused(
+        q, k_phys, v_phys, pos, pages=pages, window=window, blk_c=ps,
+        interpret=True))
+    dense = np.asarray(fa.decode_attention_fused(
+        q, k_log, v_log, pos, window=window, blk_c=ps, interpret=True))
+    np.testing.assert_array_equal(paged, dense)
+    oracle = np.asarray(ref.decode_fused_reference(
+        q, k_log, v_log, pos, window=window))
+    np.testing.assert_allclose(paged, oracle, atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------- kernel tier
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_paged_fused_bitwise_equals_dense_all_configs(arch_id):
+    """Acceptance: for every registered config's attention geometry
+    (GQA ratio, head dim, sliding window where configured), the paged
+    fused kernel under a per-row PERMUTED page table is bitwise-equal to
+    the dense fused kernel."""
+    cfg = get_smoke_config(arch_id)
+    if not cfg.has_attention:
+        pytest.skip(f"{arch_id}: no attention layers, no KV pages")
+    b, s, ps = 3, 32, 8
+    n_pages = s // ps
+    kh, h, hd = cfg.n_kv_heads, cfg.n_heads, cfg.head_dim_
+    q, k, v = _rand_kv(jax.random.key(hash(arch_id) % 2**31), b, kh, s,
+                       hd, h)
+    rng = np.random.default_rng(7)
+    pages = jnp.asarray(np.stack([rng.permutation(n_pages)
+                                  for _ in range(b)]), jnp.int32)
+    pos = jnp.asarray([s - 1, s // 2, 3], jnp.int32)
+    window = cfg.sliding_window if "local" in cfg.block_pattern else 0
+    window = min(window, s) if window else 0
+    _paged_vs_dense(q, k, v, pos, pages, ps, window=window)
+
+
+def test_paged_identity_table_is_dense():
+    """The identity table must reproduce the dense kernel exactly — the
+    no-op placement every fresh cache starts with."""
+    b, kh, h, s, hd, ps = 2, 2, 4, 64, 16, 16
+    q, k, v = _rand_kv(jax.random.key(0), b, kh, s, hd, h)
+    pages = jnp.tile(jnp.arange(s // ps, dtype=jnp.int32)[None], (b, 1))
+    pos = jnp.asarray([s - 1, 11], jnp.int32)
+    paged = np.asarray(fa.decode_attention_fused(
+        q, k, v, pos, pages=pages, blk_c=ps, interpret=True))
+    dense = np.asarray(fa.decode_attention_fused(
+        q, k, v, pos, blk_c=ps, interpret=True))
+    np.testing.assert_array_equal(paged, dense)
+
+
+def test_paged_fragmented_overprovisioned_physical_pool():
+    """Fragmentation: the physical pool holds MORE pages than any row's
+    logical span, rows point at scattered non-contiguous pages, and
+    per-row position clocks leave ragged valid-page counts — the unread
+    physical pages are invisible."""
+    b, kh, h, hd, ps = 3, 2, 4, 16, 8
+    n_log, n_phys = 4, 7                   # 3 physical pages never mapped
+    q, k_phys, v_phys = _rand_kv(jax.random.key(5), b, kh, n_phys * ps,
+                                 hd, h)
+    rng = np.random.default_rng(11)
+    pages = jnp.asarray(np.stack(
+        [rng.permutation(n_phys)[:n_log] for _ in range(b)]), jnp.int32)
+    # ragged rows: 1, 2 and 4 valid pages' worth of positions
+    pos = jnp.asarray([ps - 1, 2 * ps - 3, n_log * ps - 1], jnp.int32)
+    _paged_vs_dense(q, k_phys, v_phys, pos, pages, ps)
+    # junk immunity: clobber every UNMAPPED physical page with NaN — the
+    # paged output must not change by a single bit
+    mapped = np.unique(np.asarray(pages))
+    unmapped = np.setdiff1d(np.arange(n_phys), mapped)
+    before = np.asarray(fa.decode_attention_fused(
+        q, k_phys, v_phys, pos, pages=pages, blk_c=ps, interpret=True))
+    k_j, v_j = k_phys, v_phys
+    for p in unmapped:
+        sl = slice(p * ps, (p + 1) * ps)
+        k_j = k_j.at[:, :, sl].set(jnp.nan)
+        v_j = v_j.at[:, :, sl].set(jnp.nan)
+    after = np.asarray(fa.decode_attention_fused(
+        q, k_j, v_j, pos, pages=pages, blk_c=ps, interpret=True))
+    np.testing.assert_array_equal(before, after)
+
+
+def test_paged_extra_partial_epilogue():
+    """The fused extra-partial merge (the current token's KV riding as a
+    pre-reduced partial) composes with page indirection unchanged."""
+    from repro.models import layers as L
+    b, kh, h, s, hd, ps = 2, 2, 4, 32, 16, 8
+    ks = jax.random.split(jax.random.key(3), 5)
+    q, k, v = _rand_kv(ks[0], b, kh, s, hd, h)
+    k_new = jax.random.normal(ks[3], (b, 1, kh, hd), jnp.float32)
+    v_new = jax.random.normal(ks[4], (b, 1, kh, hd), jnp.float32)
+    extra = L.single_kv_partial(q, k_new, v_new)
+    rng = np.random.default_rng(3)
+    pages = jnp.asarray(np.stack([rng.permutation(s // ps)
+                                  for _ in range(b)]), jnp.int32)
+    pos = jnp.asarray([s - 2, 5], jnp.int32)
+    k_log = ref.gather_kv_pages(k, pages, ps)
+    v_log = ref.gather_kv_pages(v, pages, ps)
+    paged = np.asarray(fa.decode_attention_fused(
+        q, k, v, pos, extra, pages=pages, blk_c=ps, interpret=True))
+    dense = np.asarray(fa.decode_attention_fused(
+        q, k_log, v_log, pos, extra, blk_c=ps, interpret=True))
+    np.testing.assert_array_equal(paged, dense)
+
+
+# --------------------------------------------------------- hypothesis tier
+
+def _check_random_placement(seed, ps_pow, n_log, extra_phys, b):
+    ps = 2 ** ps_pow
+    n_phys = n_log + extra_phys
+    kh, h, hd = 2, 4, 16
+    q, k, v = _rand_kv(jax.random.key(seed), b, kh, n_phys * ps, hd, h)
+    rng = np.random.default_rng(seed)
+    pages = jnp.asarray(np.stack(
+        [rng.permutation(n_phys)[:n_log] for _ in range(b)]), jnp.int32)
+    pos = jnp.asarray(rng.integers(0, n_log * ps, b), jnp.int32)
+    _paged_vs_dense(q, k, v, pos, pages, ps)
+
+
+def test_random_placements_deterministic_twin():
+    """Always-on twin of the hypothesis tier: a fixed spread of page
+    sizes, fragmentation levels and row counts."""
+    for seed, ps_pow, n_log, extra in [(0, 2, 3, 0), (1, 3, 2, 2),
+                                       (2, 1, 5, 3), (3, 4, 2, 1)]:
+        _check_random_placement(seed, ps_pow, n_log, extra, b=2)
+
+
+def test_random_placements_hypothesis():
+    """Property: for ANY page size, fragmentation level, per-row
+    permutation and per-row position, paged fused == dense fused
+    bitwise.  (Needs hypothesis; the deterministic twin above always
+    runs.)"""
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(seed=st.integers(0, 2**16), ps_pow=st.integers(1, 4),
+           n_log=st.integers(1, 5), extra_phys=st.integers(0, 3))
+    def check(seed, ps_pow, n_log, extra_phys):
+        _check_random_placement(seed, ps_pow, n_log, extra_phys, b=2)
+
+    check()
+
+
+@pytest.mark.slow
+def test_fragmentation_stress_large_pool():
+    """Stress tier (pinned CI leg only): a large over-provisioned pool
+    with many small pages and heavily ragged rows."""
+    for seed in range(4):
+        _check_random_placement(seed, ps_pow=2, n_log=8,
+                                extra_phys=8, b=4)
+
+
+# -------------------------------------------------------------- serve tier
+
+def _paged_workload(cfg, rng, n_req=4):
+    from repro.launch.serve import SamplingParams
+    reqs = []
+    for i in range(n_req):
+        plen = int(rng.integers(3, 7))
+        prompt = rng.integers(1, cfg.vocab, plen).astype(np.int32)
+        embeds = None
+        if cfg.enc_dec:
+            embeds = rng.standard_normal(
+                (cfg.enc_len, cfg.d_model)).astype(np.float32)
+        sampling = (SamplingParams(temperature=0.8, top_k=8, seed=100 + i)
+                    if i % 2 else None)    # greedy + fixed-seed stochastic
+        reqs.append(dict(rid=i, prompt=prompt, max_new=6, embeds=embeds,
+                         sampling=sampling))
+    return reqs
+
+
+def _run_paged(arch, workload, *, stream, shuffle_seed=None):
+    """Serve the workload; `shuffle_seed` permutes every row's page table
+    BEFORE any prefill (None keeps the identity placement)."""
+    from repro.launch.serve import BatchedServer, Request
+    server = BatchedServer(arch, smoke=True, batch_slots=2, max_seq=32,
+                           protocol="bs", stream=stream, seg_len=4,
+                           page_size=8)
+    if shuffle_seed is not None and "page_table" in server.cache:
+        pt = np.asarray(server.cache["page_table"])
+        rng = np.random.default_rng(shuffle_seed)
+        shuffled = np.stack([rng.permutation(pt.shape[1])
+                             for _ in range(pt.shape[0])])
+        server.cache["page_table"] = jnp.asarray(shuffled, jnp.int32)
+    for w in workload:
+        server.submit(Request(**w))
+    server.run_until_drained(max_steps=100_000)
+    return server
+
+
+@pytest.mark.parametrize("arch", SERVE_ARCHES)
+def test_serve_shuffled_pages_bitwise_all_families(arch):
+    """The serving acceptance: shuffled per-row page tables through the
+    real stack (prefill scatter, decode read+write indirection, segment
+    scans) are bitwise-invisible — all 4 families, both drive loops,
+    greedy AND fixed-seed stochastic rows."""
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(17)
+    workload = _paged_workload(cfg, rng)
+
+    identity = _run_paged(arch, workload, stream=True)
+    if not cfg.has_attention:
+        assert "page_table" not in identity.cache      # pure-SSM: no pages
+    shuffled = _run_paged(arch, workload, stream=True, shuffle_seed=23)
+    got_i = {r.rid: tuple(r.generated) for r in identity.completed}
+    got_s = {r.rid: tuple(r.generated) for r in shuffled.completed}
+    assert got_s == got_i, {
+        r: (got_i[r], got_s.get(r)) for r in got_i
+        if got_i[r] != got_s.get(r)}
+
+    # per-token twin under a DIFFERENT shuffle: same tokens again
+    per_token = _run_paged(arch, workload, stream=False, shuffle_seed=91)
+    got_p = {r.rid: tuple(r.generated) for r in per_token.completed}
+    assert got_p == got_i
+    # ledger closure rides every serve run
+    for server in (identity, shuffled, per_token):
+        assert server.pages_allocated == server.pages_freed
+        assert server.pages_resident == 0
+
+
+# ------------------------------------------------------------ chunked tier
+
+@pytest.mark.parametrize("arch", ["starcoder2_3b", "mamba2_370m",
+                                  "jamba_1_5_large"])
+def test_chunked_prefill_matches_one_shot_greedy(arch):
+    """`prefill_chunk` admission (first chunk through the one-shot
+    prefill, later chunks through the two-partial resume merge) emits
+    the same GREEDY stream as one-shot admission, and the page ledger
+    closes.  (Stochastic rows are distribution-equal only: resume logits
+    are token-equal, not bitwise — PR 5's property.)"""
+    from repro.launch.serve import BatchedServer, Request
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(31)
+    prompts = [rng.integers(1, cfg.vocab,
+                            int(rng.integers(9, 14)) if i < 2 else 4
+                            ).astype(np.int32)
+               for i in range(4)]                             # long + short
+
+    def run(chunk):
+        server = BatchedServer(arch, smoke=True, batch_slots=2,
+                               max_seq=32, protocol="bs", stream=True,
+                               seg_len=4, prefill_chunk=chunk)
+        for i, prompt in enumerate(prompts):
+            server.submit(Request(i, prompt, 6))
+        server.run_until_drained(max_steps=100_000)
+        return server
+
+    base = run(None)
+    chunked = run(4)
+    got_b = {r.rid: tuple(r.generated) for r in base.completed}
+    got_c = {r.rid: tuple(r.generated) for r in chunked.completed}
+    assert got_c == got_b, {
+        r: (got_b[r], got_c.get(r)) for r in got_b
+        if got_b[r] != got_c.get(r)}
+    assert chunked.prefill_chunks > chunked.prefill_forwards  # real chunking
+    assert chunked.pages_allocated == chunked.pages_freed
+    assert chunked.pages_resident == 0
+    assert not chunked.prefilling

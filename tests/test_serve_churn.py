@@ -267,6 +267,103 @@ def test_churn_3x_oversubscribed_offload(arch):
         assert off_server.prefix_hits_partial > 0
 
 
+# -- chunked admission prefill (DESIGN.md §9) ------------------------------
+
+def _syncs_at_completion(server_cls):
+    """Subclass recording `decode_syncs` at each request's retirement —
+    the observable for the scheduler's interleave invariant (in-flight
+    rows' segment cadence must not feel a concurrent chunked
+    admission)."""
+    class Tracking(server_cls):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self.retire_syncs = {}
+
+        def _consume_segment(self, *a, **kw):
+            before = {r.rid for r in self.completed}
+            super()._consume_segment(*a, **kw)
+            for r in self.completed:
+                if r.rid not in before and r.rid not in self.retire_syncs:
+                    self.retire_syncs[r.rid] = self.decode_syncs
+    return Tracking
+
+
+def _run_chunked_admission(arch, prompts, max_new, *, max_seq=MAX_SEQ,
+                           prefill_chunk=None):
+    from repro.launch.serve import BatchedServer, Request
+    cls = _syncs_at_completion(BatchedServer)
+    server = cls(arch, smoke=True, batch_slots=len(prompts) + 1,
+                 max_seq=max_seq, protocol="bs", stream=True,
+                 seg_len=SEG_LEN, prefill_chunk=prefill_chunk)
+    for i, p in enumerate(prompts):
+        server.submit(Request(i, p, max_new))
+    server.run_until_drained(max_steps=1_000_000)
+    return server
+
+
+@pytest.mark.parametrize("arch", ["starcoder2_3b", "mamba2_370m"])
+def test_chunked_admission_leaves_inflight_streams_untouched(arch):
+    """Fast tier: a long prompt admitted in chunks into a busy batch.
+    The in-flight rows must be bitwise-identical to the no-admission
+    run, retire after the SAME decode_syncs count (the chunk forwards
+    slot between segments, adding zero decode syncs), and the page
+    ledger must close with no leaks."""
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(77)
+    short = [rng.integers(1, cfg.vocab, int(rng.integers(3, 6))
+                          ).astype(np.int32) for _ in range(3)]
+    long_p = rng.integers(1, cfg.vocab, 24).astype(np.int32)
+
+    base = _run_chunked_admission(arch, short, 10)
+    full = _run_chunked_admission(arch, short + [long_p], 10,
+                                  prefill_chunk=8)
+    got_b = {r.rid: tuple(r.generated) for r in base.completed}
+    got_f = {r.rid: tuple(r.generated) for r in full.completed}
+    # in-flight rows: token bitwise parity with the no-admission run
+    for rid in got_b:
+        assert got_f[rid] == got_b[rid], (rid, got_b[rid], got_f[rid])
+    # zero added decode syncs: every in-flight row retires at the same
+    # sync count as in the no-admission run
+    assert {r: full.retire_syncs[r] for r in base.retire_syncs} \
+        == base.retire_syncs
+    # the long prompt really admitted chunk-by-chunk and was served
+    assert full.prefill_chunks == -(-len(long_p) // 8)
+    assert len(got_f[3]) == 10
+    # page-ledger closure: allocated == freed + resident, resident == 0
+    for server in (base, full):
+        assert server.pages_allocated \
+            == server.pages_freed + server.pages_resident
+        assert server.pages_resident == 0
+        assert not server.prefilling
+
+
+@pytest.mark.slow
+def test_chunked_admission_10k_prompt():
+    """Acceptance stress: a 10k-token prompt admits via 512-token chunks
+    into a busy batch with ZERO added decode syncs for the in-flight
+    streams (the ISSUE's headline number — pinned CI leg only)."""
+    arch = "mamba2_370m"        # linear-time prefill keeps CPU CI sane
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(78)
+    short = [rng.integers(1, cfg.vocab, int(rng.integers(3, 6))
+                          ).astype(np.int32) for _ in range(3)]
+    long_p = rng.integers(1, cfg.vocab, 10_000).astype(np.int32)
+
+    base = _run_chunked_admission(arch, short, 12, max_seq=10_240)
+    full = _run_chunked_admission(arch, short + [long_p], 12,
+                                  max_seq=10_240, prefill_chunk=512)
+    got_b = {r.rid: tuple(r.generated) for r in base.completed}
+    got_f = {r.rid: tuple(r.generated) for r in full.completed}
+    for rid in got_b:
+        assert got_f[rid] == got_b[rid], rid
+    assert {r: full.retire_syncs[r] for r in base.retire_syncs} \
+        == base.retire_syncs
+    assert full.prefill_chunks == -(-10_000 // 512)
+    assert len(got_f[3]) == 12
+    assert full.pages_allocated == full.pages_freed
+    assert full.pages_resident == 0
+
+
 def test_random_suspend_interleavings_hypothesis():
     """Property tier (needs hypothesis): evict/restore correctness must
     not depend on the demand policy's TIMING — suspend random active
