@@ -192,6 +192,35 @@ def _run_chunked_server(arch: str, with_long: bool):
     return server, dt
 
 
+def _run_quant_server(arch: str, quant_kv: Optional[str]):
+    """The greedy streamed paged workload with (or without) the KV cache
+    held as int8 pages + per-(head, page) scales (DESIGN.md §10)."""
+    from repro.launch import steps as steps_lib
+    from repro.launch.serve import BatchedServer, Request
+    quant = (steps_lib.QuantConfig(kv=quant_kv) if quant_kv else None)
+    server = BatchedServer(arch, smoke=True, batch_slots=SLOTS,
+                           max_seq=64, protocol="bs", stream=True,
+                           seg_len=SEG_LEN, page_size=PAGE_SIZE,
+                           quant=quant)
+    rng = np.random.default_rng(0)
+    for i in range(N_REQ):
+        plen = int(rng.integers(3, 7))
+        server.submit(Request(i, rng.integers(
+            1, server.cfg.vocab, plen).astype(np.int32), MAX_NEW))
+    t0 = time.perf_counter()
+    server.run_until_drained()
+    dt = time.perf_counter() - t0
+    return server, dt
+
+
+def _kv_cache_bytes(cache) -> int:
+    """Bytes held by the self-attention KV pools, scale leaves included —
+    the far-tier traffic the paper's byte-economy argument is about."""
+    from repro.models import transformer as T
+    return sum(int(v.nbytes) for k, v in cache.items()
+               if T._is_self_kv(k) or T._is_kv_scale(k))
+
+
 def run() -> List[Row]:
     rows: List[Row] = []
     for arch in ARCHES:
@@ -332,6 +361,40 @@ def run() -> List[Row]:
             f"pages_resident_peak={server.pages_resident_peak};"
             f"pages_allocated={server.pages_allocated};"
             f"pages_freed={server.pages_freed}"))
+        # int8 KV quantized serving (DESIGN.md §10): the greedy streamed
+        # paged workload with the KV cache as int8 pages + per-(head,
+        # page) scales consumed inside the fused decode — the cache's
+        # cache-bytes-per-token drop ~4x on attention archs at an
+        # UNCHANGED syncs/token (quantization lives inside the jitted
+        # segment; the host loop never feels it).  SSM archs carry no
+        # KV pool, so their ratio is reported as 1 and not asserted.
+        base, _ = _run_quant_server(arch, None)
+        base_streams = {r.rid: tuple(r.generated) for r in base.completed}
+        server, dt = _run_quant_server(arch, "int8")
+        got = {r.rid: tuple(r.generated) for r in server.completed}
+        toks = sum(len(r.generated) for r in server.completed)
+        assert toks == sum(len(r.generated) for r in base.completed), arch
+        assert server.decode_syncs == base.decode_syncs, \
+            (arch, server.decode_syncs, base.decode_syncs)
+        assert server.pages_allocated == server.pages_freed \
+            and server.pages_resident == 0, arch
+        fp_bytes = _kv_cache_bytes(base.cache)
+        q_bytes = _kv_cache_bytes(server.cache)
+        ratio = fp_bytes / q_bytes if q_bytes else 1.0
+        if server.cfg.has_attention:
+            assert ratio >= 1.9, (arch, fp_bytes, q_bytes, ratio)
+        rows_match = sum(int(got[r] == base_streams[r]) for r in got)
+        rows.append((
+            f"decode_stream.stream.quant{suffix}",
+            dt / max(1, toks) * 1e6,
+            f"tokens={toks};quant_kv=int8;page_size={PAGE_SIZE};"
+            f"decode_syncs={server.decode_syncs};"
+            f"syncs_per_token={server.decode_syncs / max(1, toks):.4f};"
+            f"syncs_match_fp=1;"
+            f"kv_cache_bytes_fp={fp_bytes};"
+            f"kv_cache_bytes_int8={q_bytes};"
+            f"kv_bytes_reduction={ratio:.2f};"
+            f"rows_matching_fp={rows_match}/{len(got)}"))
         # chunked admission prefill (DESIGN.md §9): a LONG_PROMPT request
         # admitted in PREFILL_CHUNK-token chunks between decode segments
         # of a busy batch.  The in-flight stall assertion: every short

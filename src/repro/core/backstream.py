@@ -307,7 +307,8 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
                               *, window: int = 0,
                               n_chunks: Optional[int] = None,
                               extra: Optional[Any] = None,
-                              pages: Optional[jax.Array] = None
+                              pages: Optional[jax.Array] = None,
+                              kv_scales: Optional[Any] = None
                               ) -> jax.Array:
     """Single-step attention of q (B,1,H,hd) against a (possibly sequence-
     sharded) KV cache (B,KH,S,hd), combined under the active offload
@@ -335,6 +336,15 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
     logical order first (`ref.gather_kv_pages`), which yields the exact
     same array the dense path would see, so every schedule stays
     bitwise-equal to its dense twin.
+
+    `kv_scales`: optional (k_scales, v_scales), each (B, KH, S/page) f32
+    — the cache panels are then int8 pools with one symmetric scale per
+    physical page (DESIGN.md §10).  The fused path dequantizes per page
+    INSIDE the kernel (the scale rides the same scalar-prefetched page
+    indirection as the quants); the AXLE ring and the chunked fallback
+    dequantize the pool up front (physical-page order, so the scale
+    applies before any gather) and then run their fp schedules
+    unchanged.
     """
     from repro.kernels import ops
     from repro.kernels import ref as _ref
@@ -364,6 +374,9 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
             b_size *= mesh.shape[a]
         if b_size == 0 or b % b_size:
             b_axes = None
+        if kv_scales is not None:
+            k_cache = _ref.dequantize_kv_pages(k_cache, kv_scales[0])
+            v_cache = _ref.dequantize_kv_pages(v_cache, kv_scales[1])
         if pages is not None:
             k_cache = _ref.gather_kv_pages(k_cache, pages, page_size)
             v_cache = _ref.gather_kv_pages(v_cache, pages, page_size)
@@ -386,16 +399,25 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
             # paged fast path: the kernel chunk IS the page; the table
             # drives the k/v DMA index maps in-kernel, no gather
             return ops.decode_attention_fused(q, k_cache, v_cache, pos_b,
-                                              extra, pages, window=window,
+                                              extra, pages, kv_scales,
+                                              window=window,
                                               blk_c=page_size)
-        blk_c = max(1, min(128, s // max(1, n_chunks)))
+        if kv_scales is not None:
+            # the scale page width dictates the kernel chunk
+            blk_c = s // kv_scales[0].shape[2]
+        else:
+            blk_c = max(1, min(128, s // max(1, n_chunks)))
         return ops.decode_attention_fused(q, k_cache, v_cache, pos_b, extra,
+                                          kv_scales=kv_scales,
                                           window=window, blk_c=blk_c)
 
     # Chunked fallback (fused=False, and the RP schedule): per-chunk
     # partials + one merge.  With a sequence-sharded cache GSPMD lowers the
     # merge to a bulk all-gather of the (acc, m, l) statistics: the
     # bulk-synchronous flow.
+    if kv_scales is not None:
+        k_cache = _ref.dequantize_kv_pages(k_cache, kv_scales[0])
+        v_cache = _ref.dequantize_kv_pages(v_cache, kv_scales[1])
     if pages is not None:
         # page-aware fallback: gather to logical order, then the dense
         # chunked schedule — identical arrays, identical partials

@@ -247,7 +247,11 @@ def decode_attention_partial(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def _decode_fused_kernel(pos_ref, q_ref, k_ref, v_ref, *rest,
                          scale: float, blk_c: int, n_c: int, window: int,
-                         group: int, has_extra: bool):
+                         group: int, has_extra: bool,
+                         has_scales: bool = False):
+    if has_scales:
+        ks_ref, vs_ref = rest[:2]
+        rest = rest[2:]
     if has_extra:
         acc_e_ref, m_e_ref, l_e_ref, o_ref, acc_s, m_s, l_s = rest
     else:
@@ -264,6 +268,12 @@ def _decode_fused_kernel(pos_ref, q_ref, k_ref, v_ref, *rest,
     q = q_ref[0, 0].astype(jnp.float32) * scale           # (group, hd)
     k = k_ref[0, 0].astype(jnp.float32)                   # (blk_c, hd)
     v = v_ref[0, 0].astype(jnp.float32)
+    if has_scales:
+        # int8 KV page: the per-(head, page) scale rides the SAME
+        # indirection as the page itself, so dequantization happens in
+        # VMEM on the tile just DMA'd — fp pages never exist in HBM.
+        k = k * ks_ref[0, 0, 0]
+        v = v * vs_ref[0, 0, 0]
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
@@ -306,6 +316,8 @@ def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
                                                  jax.Array]] = None,
                            *, window: int = 0, blk_c: int = 128,
                            pages: Optional[jax.Array] = None,
+                           kv_scales: Optional[Tuple[jax.Array, jax.Array]]
+                           = None,
                            interpret: bool = False) -> jax.Array:
     """One-shot flash decode: q (B,1,H,hd) against the whole KV cache
     k/v (B,KH,S,hd), with per-batch-row positions pos (B,) (or a scalar,
@@ -328,11 +340,24 @@ def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
     and therefore the float result, bit for bit — is identical to the
     dense kernel on the logically-gathered cache for ANY physical
     placement.  Table entries past a row's valid length must merely be
-    in-bounds page ids; validity masks their lanes out."""
+    in-bounds page ids; validity masks their lanes out.
+
+    `kv_scales`: optional (k_scales, v_scales), each (B, KH, S/blk_c)
+    f32 — k/v are then int8 pools holding quantized pages and each tile
+    is dequantized in VMEM right after its DMA, with the scale fetched
+    through the SAME page indirection (DESIGN.md §10).  The scale page
+    width must equal the kernel chunk (enforced below)."""
     b, _, h, hd = q.shape
     kh, s = k.shape[1], k.shape[2]
     assert h % kh == 0
     group = h // kh
+    if kv_scales is not None:
+        n_sc = kv_scales[0].shape[2]
+        assert s % n_sc == 0, (s, n_sc)
+        if pages is None:
+            blk_c = s // n_sc     # the scale page IS the kernel chunk
+        else:
+            assert blk_c == s // n_sc, (blk_c, s, n_sc)
     if pages is None:
         blk_c = max(1, min(blk_c, s))
         while s % blk_c:          # largest divisor of s not above blk_c
@@ -351,24 +376,28 @@ def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
 
     kernel = functools.partial(
         _decode_fused_kernel, scale=scale, blk_c=blk_c, n_c=n_c,
-        window=window, group=group, has_extra=extra is not None)
+        window=window, group=group, has_extra=extra is not None,
+        has_scales=kv_scales is not None)
 
     def _maps(paged):
         # index maps; under scalar prefetch every map takes the table
-        # ref as a trailing argument (only k/v consult it)
+        # ref as a trailing argument (only k/v and their scales consult it)
         if paged:
             return (lambda b_, h_, j, t: (b_, 0),
                     lambda b_, h_, j, t: (b_, h_, 0, 0),
                     lambda b_, h_, j, t: (b_, h_, t[b_, j], 0),
                     lambda b_, h_, j, t: (b_, h_, 0),
-                    lambda b_, h_, j, t: (b_, h_, 0, 0))
+                    lambda b_, h_, j, t: (b_, h_, 0, 0),
+                    lambda b_, h_, j, t: (b_, h_, t[b_, j]))
         return (lambda b_, h_, j: (b_, 0),
                 lambda b_, h_, j: (b_, h_, 0, 0),
                 lambda b_, h_, j: (b_, h_, j, 0),
                 lambda b_, h_, j: (b_, h_, 0),
-                lambda b_, h_, j: (b_, h_, 0, 0))
+                lambda b_, h_, j: (b_, h_, 0, 0),
+                lambda b_, h_, j: (b_, h_, j))
 
-    pos_map, head_map, chunk_map, vec_map, out_map = _maps(pages is not None)
+    (pos_map, head_map, chunk_map, vec_map, out_map,
+     scale_map) = _maps(pages is not None)
     in_specs = [
         pl.BlockSpec((1, 1), pos_map, memory_space=pltpu.SMEM),
         pl.BlockSpec((1, 1, group, hd), head_map),
@@ -376,6 +405,13 @@ def decode_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
         pl.BlockSpec((1, 1, blk_c, hd), chunk_map),
     ]
     args = [pos2, qt, k, v]
+    if kv_scales is not None:
+        args += [kv_scales[0].astype(jnp.float32),
+                 kv_scales[1].astype(jnp.float32)]
+        in_specs += [
+            pl.BlockSpec((1, 1, 1), scale_map, memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1), scale_map, memory_space=pltpu.SMEM),
+        ]
     if extra is not None:
         acc_e, m_e, l_e = extra
         args += [acc_e.astype(jnp.float32).reshape(b, kh, group, hd),

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import knn as _knn
+from repro.kernels import quant as _quant
 from repro.kernels import ref as _ref
 from repro.kernels import sls as _sls
 from repro.kernels import ssd as _ssd
@@ -50,7 +51,8 @@ def decode_attention_partial(q, k, v, valid, *, blk_c: int = 128,
 
 
 @functools.partial(jax.jit, static_argnames=("window", "blk_c", "interpret"))
-def decode_attention_fused(q, k, v, pos, extra=None, pages=None, *,
+def decode_attention_fused(q, k, v, pos, extra=None, pages=None,
+                           kv_scales=None, *,
                            window: int = 0, blk_c: int = 128,
                            interpret: bool = False) -> jax.Array:
     """Fused one-shot flash decode (produce + merge + normalize in ONE
@@ -62,15 +64,41 @@ def decode_attention_fused(q, k, v, pos, extra=None, pages=None, *,
     The paged result is bitwise-equal to the dense kernel on the
     logically-gathered cache for any physical placement, because the
     chunk reduction visits pages in logical order either way.
-    Returns (B,1,H,hd)."""
+    `kv_scales`: optional (k_scales, v_scales), each (B, KH, S/page) f32
+    — k/v are then int8 pools dequantized per page inside the kernel
+    (the scale rides the same page indirection; DESIGN.md §10); the
+    scale page width overrides `blk_c` in the dense case and must equal
+    it in the paged case.  Returns (B,1,H,hd)."""
     if _on_tpu() or interpret:
         return _fa.decode_attention_fused(q, k, v, pos, extra,
                                           window=window, blk_c=blk_c,
-                                          pages=pages, interpret=interpret)
+                                          pages=pages, kv_scales=kv_scales,
+                                          interpret=interpret)
+    page_size = blk_c if pages is not None else 0
+    if kv_scales is not None and pages is not None:
+        assert blk_c == k.shape[2] // kv_scales[0].shape[2]
     return _ref.decode_fused_reference(q, k, v, pos, extra, window=window,
-                                       pages=pages,
-                                       page_size=blk_c if pages is not None
-                                       else 0)
+                                       pages=pages, page_size=page_size,
+                                       kv_scales=kv_scales)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quant_matmul(x, qt: "_quant.QTensor", *,
+                 interpret: bool = False) -> jax.Array:
+    """x (..., d_in) @ dequantize(qt) -> (..., n) in x.dtype, reading
+    only packed blocks + scales from HBM (DESIGN.md §10).  On TPU (or
+    with interpret=True) the dequantization is fused into the Pallas
+    matmul tile pipeline; the CPU fallback multiplies against the
+    dequantized oracle weight — same f32 grid values, so the two paths
+    agree to f32 matmul accumulation order."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if _on_tpu() or interpret:
+        out = _quant.quant_matmul(x2, qt, interpret=interpret)
+    else:
+        w = _quant.dequantize_tensor(qt)
+        out = (x2.astype(jnp.float32) @ w).astype(x.dtype)
+    return out.reshape(shape[:-1] + (out.shape[-1],))
 
 
 class BatchedSampling(NamedTuple):
@@ -105,15 +133,19 @@ def sample_tokens(logits, params: BatchedSampling, keys, *,
     rows never emit a pad id >= vocab; 0 disables the bound).  Returns
     (B,) int32 next tokens.
 
-    Semantics live in `ref.sample_tokens_reference` (the jnp oracle IS
-    the implementation): greedy rows reduce to argmax(logits) bitwise,
-    sampled rows are Gumbel-argmax over the temperature/top_k/top_p/min_p
-    filtered distribution.  There is no Pallas lowering — the math is one
-    O(B·V) sort plus elementwise work, plain XLA on every backend, so by
-    construction sampling adds no kernel launches to the streamed
-    segment (benchmarks/decode_stream.py records this accounting next to
-    its asserted syncs/token figures)."""
-    return _ref.sample_tokens_reference(
+    Semantics live in `ref.sample_tokens_reference`: greedy rows reduce
+    to argmax(logits) bitwise, sampled rows are Gumbel-argmax over the
+    temperature/top_k/top_p/min_p filtered distribution.  The serving
+    entry is `ref.sample_tokens_capped`: an O(V) `lax.top_k` partial
+    sort over the first `ref.SAMPLE_HEAD` ranks, taken whenever every
+    row's filters provably close inside the head (greedy, small top_k,
+    or nucleus mass reached), with an in-graph `lax.cond` fallback to
+    the full-argsort reference otherwise — bitwise-identical samples
+    either way (asserted in tests/test_sampling.py).  There is still no
+    Pallas lowering — plain XLA on every backend, so sampling adds no
+    kernel launches to the streamed segment (benchmarks/decode_stream.py
+    records this accounting next to its asserted syncs/token figures)."""
+    return _ref.sample_tokens_capped(
         logits, params.temperature, params.top_k, params.top_p,
         params.min_p, keys, vocab)
 

@@ -101,7 +101,9 @@ def decode_fused_reference(q: jax.Array, k: jax.Array, v: jax.Array,
                                                  jax.Array]] = None,
                            *, window: int = 0,
                            pages: Optional[jax.Array] = None,
-                           page_size: int = 0) -> jax.Array:
+                           page_size: int = 0,
+                           kv_scales: Optional[Tuple[jax.Array, jax.Array]]
+                           = None) -> jax.Array:
     """Oracle for the fused one-shot flash-decode kernel.
 
     q: (B,1,H,hd); k,v: (B,KH,S,hd); pos: (B,) int32 (or scalar,
@@ -111,7 +113,14 @@ def decode_fused_reference(q: jax.Array, k: jax.Array, v: jax.Array,
     normalization.  `pages`/`page_size`: optional (B, n_log) int32 page
     table — k/v are then PHYSICAL pools gathered to logical order first
     (`gather_kv_pages`), and `pos`/`window` keep their logical meaning.
-    Returns (B,1,H,hd) in q.dtype."""
+    `kv_scales`: optional (k_scales, v_scales), each (B, KH, n_phys_pages)
+    f32 — k/v are then int8 pools dequantized per PHYSICAL page slab
+    (`dequantize_kv_pages`) before anything else, so the paged gather and
+    the dense math see exactly the values the fused kernel reconstructs
+    in VMEM (DESIGN.md §10).  Returns (B,1,H,hd) in q.dtype."""
+    if kv_scales is not None:
+        k = dequantize_kv_pages(k, kv_scales[0])
+        v = dequantize_kv_pages(v, kv_scales[1])
     if pages is not None:
         assert page_size > 0, "page_size required with pages"
         k = gather_kv_pages(k, pages, page_size)
@@ -208,6 +217,17 @@ def _scaled_bounded_logits(lf: jax.Array, temperature: jax.Array,
     return scaled
 
 
+# Rank width of the partial-sort sampling fast path (`sample_tokens_capped`).
+# The reference's head-cumsum below is split at this rank so the fast path's
+# keep mask is BITWISE the reference's over ranks [0, SAMPLE_HEAD).
+SAMPLE_HEAD = 64
+# Conservative margin on the nucleus-closure test: the fast path only
+# engages when the head's cumulative mass clears top_p by this much, so
+# float divergence between the head cumsum and the full-vocab cumsum can
+# never flip a tail rank's keep bit relative to the reference.
+_CLOSURE_EPS = 1e-5
+
+
 def _sorted_keep(scaled: jax.Array, top_k: jax.Array, top_p: jax.Array,
                  min_p: jax.Array
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -216,18 +236,104 @@ def _sorted_keep(scaled: jax.Array, top_k: jax.Array, top_p: jax.Array,
     Shared by sampling (`sample_tokens_reference`, which draws directly
     in sorted space) and verification (`filtered_log_probs`, which
     scatters the mask back to token space).  Returns (order (B,V) rank →
-    token id, sorted_logits (B,V), keep (B,V) over ranks)."""
+    token id, sorted_logits (B,V), keep (B,V) over ranks).
+
+    Two structural choices exist so the `sample_tokens_capped` partial-
+    sort fast path can be bitwise-identical over the head ranks:
+    probabilities are softmaxed in TOKEN order and gathered into rank
+    order (a gather preserves bits; the fast path computes the same
+    token-order softmax without sorting), and the cumulative nucleus
+    mass over ranks [0, SAMPLE_HEAD) comes from a cumsum of exactly that
+    head slice (a full-vocab cumsum may round differently)."""
     b, v = scaled.shape
     order = jnp.argsort(-scaled, axis=-1)                     # (B,V)
     sorted_logits = jnp.take_along_axis(scaled, order, axis=-1)
-    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    probs_tok = jax.nn.softmax(scaled, axis=-1)               # token order
+    probs = jnp.take_along_axis(probs_tok, order, axis=-1)    # rank order
     ranks = jnp.arange(v)[None, :]
     keep = jnp.ones((b, v), bool)
     keep &= jnp.where(top_k[:, None] > 0, ranks < top_k[:, None], True)
-    cum_before = jnp.cumsum(probs, axis=-1) - probs           # mass before i
+    head = min(SAMPLE_HEAD, v)
+    cum_head = jnp.cumsum(probs[:, :head], axis=-1)           # head-only bits
+    if v > head:
+        cum_tail = jnp.cumsum(probs, axis=-1)[:, head:]
+        cum = jnp.concatenate([cum_head, cum_tail], axis=-1)
+    else:
+        cum = cum_head
+    cum_before = cum - probs                                  # mass before i
     keep &= (cum_before < top_p[:, None]) | (ranks == 0)
     keep &= probs >= min_p[:, None] * probs[:, :1]
     return order, sorted_logits, keep
+
+
+def sample_tokens_capped(logits: jax.Array, temperature: jax.Array,
+                         top_k: jax.Array, top_p: jax.Array,
+                         min_p: jax.Array, keys: jax.Array,
+                         vocab: int = 0, head: int = SAMPLE_HEAD
+                         ) -> jax.Array:
+    """`sample_tokens_reference` with a partial-sort fast path.
+
+    The full reference pays an O(V log V) argsort per step; for serving
+    params (greedy, modest top_k, nucleus top_p < 1) the winner's rank is
+    almost surely within the first `head` ranks.  This entry computes the
+    top-`head` ranks with `lax.top_k` (O(V)), checks per row that the
+    filters provably close within the head — greedy, `0 < top_k <= head`,
+    or head mass ≥ `top_p + _CLOSURE_EPS` — and only when EVERY row is
+    closed takes the head-only branch; otherwise it falls back to the
+    full reference in-graph (`lax.cond`, so a jitted serve segment pays
+    whichever branch the batch needs).
+
+    Bitwise-identical to `sample_tokens_reference` for every input:
+      * `lax.top_k` ties break toward the lower index, exactly like the
+        stable `argsort(-scaled)`, so head ranks/values match the sort.
+      * probabilities come from the same token-order softmax, gathered.
+      * the head's cumulative mass is the reference's own head cumsum
+        (see `_sorted_keep`), so the keep mask matches over head ranks,
+        and closure guarantees every tail rank is dropped by BOTH paths
+        (the `_CLOSURE_EPS` margin absorbs full-vs-head cumsum rounding).
+      * the Gumbel draw is the full (V,) row draw sliced to the head —
+        same threefry bits the reference adds at those ranks; tail ranks
+        are -inf in both paths, so the argmax winner coincides."""
+    b, v = logits.shape
+    if v <= head:
+        return sample_tokens_reference(logits, temperature, top_k, top_p,
+                                       min_p, keys, vocab)
+    lf = logits.astype(jnp.float32)
+    temperature = jnp.asarray(temperature, jnp.float32).reshape(b)
+    top_k = jnp.asarray(top_k, jnp.int32).reshape(b)
+    top_p = jnp.asarray(top_p, jnp.float32).reshape(b)
+    min_p = jnp.asarray(min_p, jnp.float32).reshape(b)
+
+    greedy = (temperature <= 0.0) | (top_k == 1)
+    scaled = _scaled_bounded_logits(lf, temperature, vocab)
+    top_vals, top_idx = jax.lax.top_k(scaled, head)           # (B,head)
+    probs_tok = jax.nn.softmax(scaled, axis=-1)
+    probs_h = jnp.take_along_axis(probs_tok, top_idx, axis=-1)
+    cum_head = jnp.cumsum(probs_h, axis=-1)
+    closed = (greedy
+              | ((top_k > 0) & (top_k <= head))
+              | (cum_head[:, -1] >= top_p + _CLOSURE_EPS))
+
+    def fast(_):
+        ranks = jnp.arange(head)[None, :]
+        keep = jnp.ones((b, head), bool)
+        keep &= jnp.where(top_k[:, None] > 0, ranks < top_k[:, None], True)
+        cum_before = cum_head - probs_h
+        keep &= (cum_before < top_p[:, None]) | (ranks == 0)
+        keep &= probs_h >= min_p[:, None] * probs_h[:, :1]
+        filtered = jnp.where(keep, top_vals, -jnp.inf)
+        gumbel = jax.vmap(
+            lambda kk: jax.random.gumbel(kk, (v,), jnp.float32))(keys)
+        rank = jnp.argmax(filtered + gumbel[:, :head], axis=-1)
+        sampled = jnp.take_along_axis(top_idx, rank[:, None], axis=-1)[:, 0]
+        return jnp.where(greedy, jnp.argmax(lf, axis=-1),
+                         sampled).astype(jnp.int32)
+
+    def full(_):
+        return sample_tokens_reference(logits, temperature, top_k, top_p,
+                                       min_p, keys, vocab)
+
+    return jax.lax.cond(jnp.all(closed), fast, full, operand=None)
 
 
 def filtered_log_probs(logits: jax.Array, temperature: jax.Array,
@@ -372,6 +478,135 @@ def verify_tokens_reference(target_logits: jax.Array,
     out = jnp.where(greedy[:, None], tgt_argmax, out_s)
     accept_len = jnp.where(greedy, g_accept, s_accept)
     return out.astype(jnp.int32), accept_len.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Block quantization oracles (q8_0 / q4_k weights, int8 KV pages) — §10
+# --------------------------------------------------------------------------
+#
+# These are the numerical ground truth for `kernels.quant` (the Pallas
+# dequant-fused matmul) and for the int8 KV consumption inside
+# `decode_attention_fused`.  Each format carries a per-block worst-case
+# error bound (`quant_error_bound`) that the parity suites assert
+# element-wise — the "tolerance tiers" of DESIGN.md §10.
+
+QUANT_BLOCK = 32
+
+
+def _pad_blocks(w: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    """Zero-pad the second-to-last (input) axis of w (..., d, n) up to a
+    multiple of `block` and return the blocked view (..., nB, block, n)."""
+    d, n = w.shape[-2], w.shape[-1]
+    nb = -(-d // block)
+    pad = nb * block - d
+    wf = w.astype(jnp.float32)
+    if pad:
+        wf = jnp.concatenate(
+            [wf, jnp.zeros(w.shape[:-2] + (pad, n), jnp.float32)], axis=-2)
+    return wf.reshape(w.shape[:-2] + (nb, block, n)), pad
+
+
+def quantize_q8_0(w: jax.Array, block: int = QUANT_BLOCK
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric 8-bit block quantization along the input axis.
+
+    w: (..., d, n) → (scales (..., nB, n) f32, quants (..., nB, block, n)
+    int8) with nB = ceil(d/block); scale = absmax/127 per (block, column).
+    Ragged final blocks are zero-padded (zeros never raise the absmax).
+    Per-element error of dequantize(quantize(w)) is <= scale/2."""
+    wb, _ = _pad_blocks(w, block)
+    scales = jnp.max(jnp.abs(wb), axis=-2) / 127.0
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(wb / safe[..., None, :]), -127, 127)
+    return scales, q.astype(jnp.int8)
+
+
+def dequantize_q8_0(scales: jax.Array, quants: jax.Array,
+                    d: int) -> jax.Array:
+    """Inverse of `quantize_q8_0`: (..., nB, n), (..., nB, block, n) →
+    (..., d, n) f32 (the true input width `d` slices off block padding)."""
+    w = quants.astype(jnp.float32) * scales[..., None, :]
+    nb, block, n = w.shape[-3:]
+    return w.reshape(w.shape[:-3] + (nb * block, n))[..., :d, :]
+
+
+def quantize_q4_k(w: jax.Array, block: int = QUANT_BLOCK
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Asymmetric 4-bit block quantization (simplified q4_k: one f32
+    scale + one f32 min per block, no super-blocks).
+
+    w: (..., d, n) → (scales (..., nB, n), mins (..., nB, n), packed
+    (..., nB, block//2, n) uint8).  q = round((w - min)/scale) in [0, 15],
+    two quants per byte (element 2i in the low nibble, 2i+1 in the high).
+    Block min/max are taken over VALID lanes only, so a ragged final
+    block's range is not widened by padding.  Per-element error is
+    <= scale/2 = (max - min)/30."""
+    d = w.shape[-2]
+    wb, pad = _pad_blocks(w, block)
+    if pad:
+        lane = jnp.arange(wb.shape[-3] * block).reshape(wb.shape[-3], block)
+        vmask = (lane < d)[..., None]                  # (nB, block, 1)
+        wmax = jnp.max(jnp.where(vmask, wb, -jnp.inf), axis=-2)
+        wmin = jnp.min(jnp.where(vmask, wb, jnp.inf), axis=-2)
+    else:
+        wmax = jnp.max(wb, axis=-2)
+        wmin = jnp.min(wb, axis=-2)
+    scales = (wmax - wmin) / 15.0
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round((wb - wmin[..., None, :]) / safe[..., None, :]),
+                 0, 15).astype(jnp.uint8)
+    packed = q[..., 0::2, :] | (q[..., 1::2, :] << 4)
+    return scales, wmin, packed
+
+
+def dequantize_q4_k(scales: jax.Array, mins: jax.Array, packed: jax.Array,
+                    d: int) -> jax.Array:
+    """Inverse of `quantize_q4_k` → (..., d, n) f32."""
+    lo = (packed & 0xF).astype(jnp.float32)
+    hi = (packed >> 4).astype(jnp.float32)
+    q = jnp.stack([lo, hi], axis=-2)                   # (..., nB, hb, 2, n)
+    nb, hb, _, n = q.shape[-4:]
+    q = q.reshape(q.shape[:-4] + (nb, hb * 2, n))
+    w = q * scales[..., None, :] + mins[..., None, :]
+    return w.reshape(w.shape[:-3] + (nb * hb * 2, n))[..., :d, :]
+
+
+def quant_error_bound(fmt: str, scales: jax.Array) -> jax.Array:
+    """Worst-case |dequant(quant(w)) - w| per element, per block: the
+    rounding half-step of the format's grid.  Broadcasts against the
+    blocked view of w (append a lane axis to compare element-wise)."""
+    if fmt == "q8_0":
+        return scales * 0.5
+    if fmt == "q4_k":
+        return scales * 0.5
+    raise ValueError(f"unknown quant format: {fmt}")
+
+
+def quantize_kv_pages(kv: jax.Array, page_size: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Int8 KV pages with one f32 scale per (head, page).
+
+    kv: (B, KH, S, hd) → (quants int8 same shape, scales (B, KH, S/ps)
+    f32); scale = absmax over the page's (ps, hd) slab / 127.  This is
+    the whole-cache oracle twin of the models' incremental per-token
+    writes (`transformer.quant_kv_update_stacked`)."""
+    b, kh, s, hd = kv.shape
+    assert s % page_size == 0, (s, page_size)
+    n_pages = s // page_size
+    kr = kv.astype(jnp.float32).reshape(b, kh, n_pages, page_size, hd)
+    scales = jnp.max(jnp.abs(kr), axis=(-2, -1)) / 127.0
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(kr / safe[..., None, None]), -127, 127)
+    return q.astype(jnp.int8).reshape(b, kh, s, hd), scales
+
+
+def dequantize_kv_pages(quants: jax.Array, scales: jax.Array) -> jax.Array:
+    """Inverse of `quantize_kv_pages`: scales broadcast per page slab."""
+    b, kh, s, hd = quants.shape
+    n_pages = scales.shape[-1]
+    ps = s // n_pages
+    kr = quants.astype(jnp.float32).reshape(b, kh, n_pages, ps, hd)
+    return (kr * scales[..., None, None]).reshape(b, kh, s, hd)
 
 
 # --------------------------------------------------------------------------

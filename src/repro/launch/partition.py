@@ -93,6 +93,22 @@ def _leaf_spec(plan: PartitionPlan, cfg: ArchConfig, name: str,
     return P(*([None] * nd))
 
 
+def _quant_leaf_spec(plan: PartitionPlan, name: str, leaf: Any) -> P:
+    """Spec for one child array of a block-quantized QTensor leaf
+    (DESIGN.md §10).  The packed input-block axis cannot be split
+    without tearing quant blocks across shards, so only the OUT-COLUMN
+    axis (always last, for scales/mins and quants alike) is sharded —
+    by tp where the fp rule tensor-parallelized the projection's output,
+    by the fsdp axes where the fp rule put the weight's d_model output
+    (wo/out_proj/w_down)."""
+    mesh, tp, fs = plan.mesh, plan.tp, plan.fsdp_axes
+    last = leaf.shape[-1]
+    axes = fs if name in ("wo", "out_proj", "w_down") else tp
+    if not (axes and _divisible(last, mesh, axes)):
+        axes = None
+    return P(*([None] * (leaf.ndim - 1) + [axes]))
+
+
 def param_specs(abstract_params: Any, cfg: ArchConfig,
                 plan: PartitionPlan) -> Any:
     """PartitionSpec pytree matching the parameter pytree."""
@@ -103,6 +119,9 @@ def param_specs(abstract_params: Any, cfg: ArchConfig,
             if isinstance(entry, jax.tree_util.DictKey):
                 name = str(entry.key)
                 break
+        if path and isinstance(path[-1], jax.tree_util.GetAttrKey):
+            # QTensor child (scales/quants/mins) of a quantized leaf
+            return _quant_leaf_spec(plan, name or "", leaf)
         return _leaf_spec(plan, cfg, name or "", leaf)
 
     return jax.tree_util.tree_map_with_path(walk, abstract_params)
@@ -160,6 +179,15 @@ def cache_specs(abstract_cache: Dict[str, Any], cfg: ArchConfig,
                        else None, None)
             continue
         batch_ax = b_axes if _divisible(shape[1], mesh, b_axes) else None
+        if k.startswith(("kscale", "vscale")):
+            # (L, B, KH, n_pages) per-page scales of an int8 KV cache
+            # (DESIGN.md §10): batch follows the panels; the page axis
+            # must stay whole — each page's scale lives with its page,
+            # and sequence (tp) sharding of the int8 panels would split
+            # pages across shards anyway, so quantized serving keeps the
+            # sequence axis unsharded (the serve path is single-shard)
+            out[k] = P(None, batch_ax, None, None)
+            continue
         if k.startswith(("k", "v")) and not k.startswith("conv"):
             seq_ax = tp if (tp and _divisible(shape[3], mesh, tp)) else None
             out[k] = P(None, batch_ax, None, seq_ax, None)

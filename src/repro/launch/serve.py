@@ -78,6 +78,13 @@ and `rounds·(k+1)` tokens per slot at the SAME one-host-sync-per-segment
 cost, growing tokens-per-host-sync by the accept rate.  Greedy streams
 are bitwise-identical to non-speculative serving for any draft; sampled
 streams are distribution-identical.
+
+Quantized serving (`--quant-weights {q8_0,q4_k}` / `--quant-kv int8`,
+DESIGN.md §10) composes with all of the above: weight stacks are
+block-quantized once at construction (the fused matmul dequantizes in
+VMEM), and an int8 KV cache carries per-(layer, row, head, page) scales
+that ride the page table, the host-tier evict/restore snapshots (~2x
+fewer KV bytes per request) and the prefix trie natively.
 """
 from __future__ import annotations
 
@@ -271,7 +278,8 @@ class BatchedServer:
                  host_offload: bool = False, prefix_cache: bool = False,
                  evict_after: int = 1, offload_chunks: int = 2,
                  page_size: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 quant: Optional[steps_lib.QuantConfig] = None):
         self.cfg = (get_smoke_config(arch_id) if smoke
                     else get_config(arch_id))
         self.model = get_model(self.cfg)
@@ -284,18 +292,33 @@ class BatchedServer:
         self.rules = sh.ShardingRules(mesh, seq_shard_attn=True) \
             if mesh is not None else None
         self.params = self.model.init_params(self.cfg, jax.random.key(0))
+        # serving-time quantization (DESIGN.md §10): block-quantized
+        # weight stacks and/or an int8 KV cache.  Weight quant rewrites
+        # the params ONCE here — everything downstream (prefill, decode
+        # segments, self-draft slicing) dispatches on the QTensor leaves;
+        # KV quant is a property of the cache (scale leaves), detected by
+        # every consumer from the cache keys, so no step function needs a
+        # flag.
+        self.quant = quant or steps_lib.QuantConfig()
+        if self.quant.weights is not None:
+            from repro.models.quantize import quantize_params
+            self.params = quantize_params(self.params, self.quant.weights)
         # block-sparse KV paging (DESIGN.md §9): attention caches carry a
         # (B, n_pages) page table; `page_size` overrides the default
         # chunk-as-page size (which reproduces the dense kernel's grid).
         self.cache = self.model.init_cache(self.cfg, batch_slots, max_seq,
-                                           page_size=page_size)
+                                           page_size=page_size,
+                                           kv_quant=self.quant.kv)
         # page ledger: one logical page = `page_size` sequence positions
-        # of one slot row, charged for the row's full prompt+budget span
-        # at admission and released at every retirement/suspension path
-        # (closure invariant: allocated == freed + resident, asserted by
-        # tests/test_serve_churn.py).  Pure-SSM caches have no page
-        # table; the ledger still tracks logical KV-footprint spans with
-        # the default page size so the accounting is arch-uniform.
+        # of one slot row, charged AS THE POSITION CLOCK ADVANCES
+        # (prompt pages at admission, decode pages at segment dispatch,
+        # trimmed to the true clock at consume) and released at every
+        # retirement/suspension path — so pages_resident is true
+        # occupancy, not the admission-time upper bound (closure
+        # invariant: allocated == freed + resident, asserted every tick
+        # and by tests/test_serve_churn.py).  Pure-SSM caches have no
+        # page table; the ledger still tracks logical KV-footprint spans
+        # with the default page size so the accounting is arch-uniform.
         self.page_size = (transformer.cache_page_size(self.cache)
                           if "page_table" in self.cache
                           else transformer.default_page_size(max_seq))
@@ -428,8 +451,6 @@ class BatchedServer:
         self.host_offload = host_offload
         self.evict_after = max(1, evict_after)
         self.offload_chunks = offload_chunks
-        assert not (host_offload and spec), \
-            "host-tier offload under speculative serving is a ROADMAP item"
         assert not (prefix_cache and spec), \
             "prefix reuse under speculative serving is a ROADMAP item"
         assert not (prefix_cache and self.cfg.enc_dec), \
@@ -446,6 +467,15 @@ class BatchedServer:
             resume = steps_lib.make_resume_prefill(self.cfg)
             self.resume_fn = (jax.jit(resume, donate_argnums=(1,))
                               if resume is not None else None)
+        if host_offload and spec:
+            # eviction under speculative serving (DESIGN.md §8.5): the
+            # draft's slot pages leave and return WITH the target's, as
+            # one paired page set — a restored row resumes draft-and-
+            # verify from the exact draft state it was evicted with, so
+            # greedy evicted streams stay bitwise non-evicted ones
+            dex, dins = steps_lib.make_slot_page_fns(self.draft_cfg)
+            self.draft_extract_fn = jax.jit(dex, static_argnums=(2,))
+            self.draft_insert_fn = jax.jit(dins, donate_argnums=(0,))
         # ---- chunked admission prefill (DESIGN.md §9) --------------------
         # `prefill_chunk=C` admits prompts longer than C in C-token chunks
         # dispatched at most ONE per loop tick, each slotted BEHIND the
@@ -503,22 +533,38 @@ class BatchedServer:
 
     # -- page ledger (DESIGN.md §9) ----------------------------------------
 
-    def _alloc_pages(self, slot: int, footprint: int) -> None:
-        """Charge `slot` the page span of a `footprint`-position row:
-        the row's whole prompt + budget reservation, known at admission
-        (the ring cache physically reserves max_seq regardless — the
-        ledger tracks the LOGICAL reservation the paged cache could
-        reclaim)."""
-        n = -(-min(footprint, self.max_seq) // self.page_size)
-        assert self.slot_pages[slot] == 0, (slot, self.slot_pages[slot])
+    def _pages_for(self, footprint: int) -> int:
+        """Page span of a `footprint`-position row, clamped to the ring
+        capacity (positions past max_seq wrap onto already-charged
+        pages)."""
+        return -(-min(int(footprint), self.max_seq) // self.page_size)
+
+    def _set_pages(self, slot: int, n: int) -> None:
+        """Delta-account slot's resident page count to exactly `n`.
+
+        The ledger charges pages AS THE POSITION CLOCK ADVANCES, not the
+        whole prompt+budget span at admission: a dispatch charges the
+        segment's worst-case footprint up front (the rows it is about to
+        write), consume trims back to the true post-segment clock, and
+        retirement/suspension releases everything.  The old
+        admission-time span charge counted pages no token had touched —
+        `pages_resident` overshot true occupancy by the UNSPENT budget of
+        every active row, so the peak statistic (the paper's
+        memory-pressure signal) was an upper bound, not a measurement.
+        Closure `allocated == freed + resident` holds at every step by
+        construction and is asserted per tick (`assert_ledger`)."""
+        cur = int(self.slot_pages[slot])
+        assert n >= 0, (slot, n)
+        if n > cur:
+            self.pages_allocated += n - cur
+        else:
+            self.pages_freed += cur - n
         self.slot_pages[slot] = n
-        self.pages_allocated += n
         self.pages_resident_peak = max(self.pages_resident_peak,
                                        self.pages_resident)
 
     def _free_pages(self, slot: int) -> None:
-        self.pages_freed += int(self.slot_pages[slot])
-        self.slot_pages[slot] = 0
+        self._set_pages(slot, 0)
 
     @property
     def pages_resident(self) -> int:
@@ -526,6 +572,17 @@ class BatchedServer:
         prefill) slots; `allocated == freed + resident` at every point,
         so `allocated == freed` in a drained server (no page leaks)."""
         return int(self.slot_pages.sum())
+
+    def assert_ledger(self) -> None:
+        """The per-tick closure invariant: every page ever charged is
+        either freed or resident in a currently-occupied slot, and no
+        unoccupied slot holds pages."""
+        assert self.pages_allocated == self.pages_freed \
+            + self.pages_resident, (self.pages_allocated, self.pages_freed,
+                                    self.pages_resident)
+        for s in range(self.batch):
+            if self.active[s] is None and s not in self.prefilling:
+                assert self.slot_pages[s] == 0, (s, self.slot_pages[s])
 
     def _prefill(self, slot: int, req: Request) -> jax.Array:
         """Real prefill: the whole prompt through the jitted prefill step
@@ -672,10 +729,19 @@ class BatchedServer:
         cannot be re-admitted before that segment is consumed (consume
         happens within one loop iteration of dispatch)."""
         req = self.active[slot]
-        assert req is not None and not self.spec
+        assert req is not None
         t0 = time.perf_counter()
         with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
             pages = dict(self.extract_fn(self.cache, slot, None))
+            if self.spec:
+                # paired page set (DESIGN.md §8.5): the draft cache's
+                # slot row rides the same snapshot under a "draft/" key
+                # prefix, so target and draft state stay in lockstep
+                # across the evict→restore round trip
+                dpages = self.draft_extract_fn(self.draft_cache, slot,
+                                               None)
+                pages.update({"draft/" + k: v
+                              for k, v in dpages.items()})
         snap = stream_offload_to_host(pages, chunks=self.offload_chunks)
         saved = stream_offload_to_host(
             steps_lib.save_slot_state(self.state, slot))
@@ -704,16 +770,31 @@ class BatchedServer:
         saved = saved_snap.materialize()
         self.host_syncs += 1        # the saved-state read (was async)
         if not bool(saved["alive"]):
+            if self.spec:
+                # the row died in its final in-flight segment after
+                # eviction: its lifetime accept record rides the saved
+                # SlotState row, not the live device counters
+                req.spec_accepted = int(saved["accepted"])
+                req.spec_proposed = int(saved["proposed"])
             self.restored_dead += 1
             return False
         pages = stream_offload_to_device(snap.materialize(),
                                          chunks=self.offload_chunks)
+        dpages = {k[len("draft/"):]: v for k, v in pages.items()
+                  if k.startswith("draft/")}
+        pages = {k: v for k, v in pages.items()
+                 if not k.startswith("draft/")}
         with self._ctx(), sh.use_rules(self.rules), use_offload(self.offload):
             self.cache = self.insert_fn(self.cache, pages, slot)
+            if self.spec:
+                self.draft_cache = self.draft_insert_fn(
+                    self.draft_cache, dpages, slot)
         self.state = steps_lib.restore_slot(self.state, slot, saved)
         self.positions[slot] = int(saved["position"])
         self.remaining[slot] = int(saved["remaining"])
-        self._alloc_pages(slot, self.positions[slot] + self.remaining[slot])
+        # re-charge exactly the restored clock's pages (not the unspent
+        # budget) — the suspension freed the same count
+        self._set_pages(slot, self._pages_for(self.positions[slot]))
         self.slot_age[slot] = 0
         self.restores += 1
         self.restore_dispatch_time += time.perf_counter() - t0
@@ -754,7 +835,10 @@ class BatchedServer:
             assert len(req.prompt) + max_new + self.spec_k <= self.max_seq, \
                 (len(req.prompt), max_new, self.spec_k, self.max_seq)
         logits = self._admit_prefill(slot, req)
-        self._alloc_pages(slot, len(req.prompt) + max_new)
+        # the ledger charges what the clock has covered — the prompt's
+        # pages, just written; the budget's pages are charged only as
+        # decode dispatches actually reach them (see _set_pages)
+        self._set_pages(slot, self._pages_for(len(req.prompt)))
         return self._finish_admit(slot, req, logits)
 
     def _finish_admit(self, slot: int, req: Request,
@@ -797,11 +881,10 @@ class BatchedServer:
     def _begin_chunked(self, slot: int, req: Request) -> None:
         """Reserve `slot` for a chunked admission: the slot joins the
         `prefilling` map (kept out of decode dispatch, slot filling and
-        eviction) and its pages are charged now — the chunks about to
-        land write into them.  No forward runs here; `_pump_prefill`
-        dispatches the chunks one loop tick at a time."""
-        sp = req.sampling or GREEDY
-        max_new = sp.max_new if sp.max_new is not None else req.max_new
+        eviction).  No forward runs here and no pages are charged yet —
+        each chunk dispatch in `_pump_prefill` charges exactly the pages
+        its rows land in, so mid-admission residency tracks the prefix
+        actually written, not the whole prompt+budget span."""
         plen = len(req.prompt)
         assert plen <= self.max_seq, (plen, self.max_seq)
         self.prefilling[slot] = {
@@ -809,7 +892,6 @@ class BatchedServer:
             "plan": self.chunk_plan(plen, self.prefill_chunk),
             "next": 0,
         }
-        self._alloc_pages(slot, plen + max_new)
 
     def _pump_prefill(self) -> None:
         """Dispatch AT MOST ONE prefill chunk — the scheduler's interleave
@@ -838,6 +920,8 @@ class BatchedServer:
                     start + size, start)
         self.prefill_chunk_time += time.perf_counter() - t0
         self.prefill_chunks += 1
+        # charge the pages this chunk's rows just landed in
+        self._set_pages(slot, self._pages_for(start + size))
         st["next"] += 1
         if st["next"] < len(st["plan"]):
             return
@@ -939,16 +1023,35 @@ class BatchedServer:
                 if not (sp.temperature <= 0 or sp.top_k == 1) \
                         or sp.stop_tokens:
                     plain = False
+                # worst-case footprint of the segment about to run:
+                # seg_len rounds of k+1 emits, plus up to spec_k junk
+                # ring-writes of a verify forward past the final clock;
+                # `_consume_segment` trims back to the true clock
+                self._set_pages(s, max(
+                    int(self.slot_pages[s]),
+                    self._pages_for(self.positions[s]
+                                    + seg_len * (self.spec_k + 1)
+                                    + self.spec_k)))
                 rows[s] = (req, None)
                 continue
             if not (sp.temperature <= 0 or sp.top_k == 1):
                 plain = False
             if sp.stop_tokens:
                 plain = False
+                # stop-regime rows: emit count is device-decided — charge
+                # the full segment span, trimmed back at consume
+                self._set_pages(s, max(
+                    int(self.slot_pages[s]),
+                    self._pages_for(self.positions[s] + seg_len)))
                 rows[s] = (req, None)
                 continue
             take = int(min(seg_len, self.remaining[s]))
             self.remaining[s] -= take
+            # budget-regime rows advance by exactly `take`: charge the
+            # pages this segment's ring writes will touch
+            self._set_pages(s, max(int(self.slot_pages[s]),
+                                   self._pages_for(self.positions[s]
+                                                   + take)))
             rows[s] = (req, take)
             if self.remaining[s] <= 0:
                 self.completed.append(req)
@@ -966,6 +1069,7 @@ class BatchedServer:
         (up to spec_k+1 tokens), still consumed synchronously."""
         self._fill_slots()
         self._pump_prefill()       # <= one admission chunk per token step
+        self.assert_ledger()
         if all(r is None for r in self.active):
             return
         rows, plain = self._dispatch_rows(1)
@@ -979,12 +1083,14 @@ class BatchedServer:
                 self.steps += self.spec_k + 1
                 self._consume_segment(seg, emit, self.state, rows,
                                       alens=alens)
+                self.assert_ledger()
                 return
             fn = self.step_plain_fn if plain else self.step_fn
             seg, emit, self.state, self.cache = fn(
                 self.params, self.cache, self.state)
         self.steps += 1
         self._consume_segment(seg, emit, self.state, rows)
+        self.assert_ledger()
 
     # -- streamed loop (producer-initiated token stream) -------------------
 
@@ -1034,6 +1140,7 @@ class BatchedServer:
                 # ONE host sync per segment; overlaps the segment just
                 # dispatched above.
                 self._consume_segment(*pending[:4], alens=pending[4])
+            self.assert_ledger()
             pending = nxt_pending
             if pending is not None:
                 continue
@@ -1091,6 +1198,10 @@ class BatchedServer:
                 assert pos[s] == self.positions[s] + len(toks), \
                     (s, pos[s], self.positions[s], len(toks))
                 self.positions[s] = int(pos[s])
+                # trim the dispatch-time worst-case charge back to the
+                # pages the clock actually reached (a no-op for budget
+                # rows, a release for early-stopped / frozen rows)
+                self._set_pages(s, self._pages_for(self.positions[s]))
                 if take is None:
                     self.remaining[s] = int(rem[s])
                     if not alive[s]:
@@ -1164,6 +1275,15 @@ def main() -> int:
                     help="admit prompts longer than this in chunked "
                          "prefills interleaved with decode segments "
                          "(DESIGN.md §9)")
+    ap.add_argument("--quant-weights", default=None,
+                    choices=["q8_0", "q4_k"],
+                    help="block-quantize the dense projection stacks; "
+                         "the fused matmul dequantizes per block in "
+                         "VMEM (DESIGN.md §10)")
+    ap.add_argument("--quant-kv", default=None, choices=["int8"],
+                    help="int8 KV cache with per-(layer,row,head,page) "
+                         "scales applied inside the fused decode kernel "
+                         "(DESIGN.md §10)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -1176,7 +1296,10 @@ def main() -> int:
                            evict_after=args.evict_after,
                            offload_chunks=args.offload_chunks,
                            page_size=args.page_size,
-                           prefill_chunk=args.prefill_chunk)
+                           prefill_chunk=args.prefill_chunk,
+                           quant=steps_lib.QuantConfig(
+                               weights=args.quant_weights,
+                               kv=args.quant_kv))
     stops = (server.cfg.eos_token,) if args.stop_eos else ()
     sampled = (args.temperature > 0 or args.top_k > 0 or args.top_p < 1.0
                or args.stop_eos)

@@ -2,7 +2,8 @@
 training driver, and the serving driver."""
 from __future__ import annotations
 
-from typing import NamedTuple
+import dataclasses
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +17,35 @@ from repro.optim import compression
 # stop-token slots per serving request (padded with -1); a static width so
 # the SlotState pytree never retraces on admission
 MAX_STOP_TOKENS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Serving-time quantization selection (DESIGN.md §10).
+
+    weights — block-quantize every dense projection stack of the TARGET
+              params into "q8_0" (int8, per-32 symmetric scale) or
+              "q4_k" (packed int4, per-32 scale+min); the fused matmul
+              dequantizes blocks in VMEM, so the fp weights never
+              materialize in HBM.  A self-draft slices the QUANTIZED
+              stacks (QTensor rides the truncation `tree.map`), so
+              draft and target read the same bytes.
+    kv      — "int8" stores the self-attention KV panels as int8 pools
+              with one f32 scale per (layer, row, kv-head, physical
+              page); decode/verify/prefill write quantized rows and the
+              fused decode kernel applies the per-page scale in-kernel.
+              Host-tier eviction, prefix reuse, and chunked prefill all
+              transport the quantized pages natively (~2x fewer bytes
+              per token of KV traffic).
+
+    Either field may be None (fp weights / fp KV); QuantConfig() is the
+    all-fp identity."""
+    weights: Optional[str] = None   # None | "q8_0" | "q4_k"
+    kv: Optional[str] = None        # None | "int8"
+
+    def __post_init__(self):
+        assert self.weights in (None, "q8_0", "q4_k"), self.weights
+        assert self.kv in (None, "int8"), self.kv
 
 
 class SlotState(NamedTuple):

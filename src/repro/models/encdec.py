@@ -17,6 +17,7 @@ from jax import lax
 
 from repro.models import layers as L
 from repro.models import transformer as T
+from repro.models.quantize import matmul
 from repro.models.config import ArchConfig
 from repro.sharding import constrain
 
@@ -61,7 +62,7 @@ def _enc_attn(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     q, k, v = T._qkv(cfg, p, x, positions)
     o = L.blocked_attention(q, k, v, causal=False)
-    return x + o.reshape(b, s, -1) @ p["wo"]
+    return x + matmul(o.reshape(b, s, -1), p["wo"])
 
 
 def encode(cfg: ArchConfig, params: Params, embeds: jax.Array,
@@ -99,11 +100,11 @@ def _cross_attn(cfg: ArchConfig, p: Params, x: jax.Array,
     b, s, _ = x.shape
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     hx = L.rms_norm(x, p["ln"], cfg.norm_eps)
-    q = (hx @ p["wq"]).reshape(b, s, h, hd)
-    k = (enc_out @ p["wk"]).reshape(b, enc_out.shape[1], kh, hd)
-    v = (enc_out @ p["wv"]).reshape(b, enc_out.shape[1], kh, hd)
+    q = matmul(hx, p["wq"]).reshape(b, s, h, hd)
+    k = matmul(enc_out, p["wk"]).reshape(b, enc_out.shape[1], kh, hd)
+    v = matmul(enc_out, p["wv"]).reshape(b, enc_out.shape[1], kh, hd)
     o = L.blocked_attention(q, k, v, causal=False, block=500)
-    return x + o.reshape(b, s, -1) @ p["wo"]
+    return x + matmul(o.reshape(b, s, -1), p["wo"])
 
 
 def decoder_forward(cfg: ArchConfig, params: Params, tokens: jax.Array,
@@ -156,7 +157,8 @@ def logits_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
 # --------------------------------------------------------------------------
 
 def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
-               enc_len: int = 0, page_size=None) -> Dict[str, Any]:
+               enc_len: int = 0, page_size=None,
+               kv_quant=None) -> Dict[str, Any]:
     """Self-attention KV cache + precomputed per-layer cross KV.
 
     `enc_pos` is the per-slot ENCODER length clock: cross-attention at
@@ -167,9 +169,12 @@ def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
     callers at the historical all-rows-valid behavior.
 
     The decoder self-KV panels inherit the transformer page table
-    (DESIGN.md §9, `page_size` passthrough); cross-KV is written once
-    per admission and read whole, so it stays dense (unpaged)."""
-    cache = T.init_cache(cfg, batch_size, max_seq, page_size=page_size)
+    (DESIGN.md §9, `page_size` passthrough) and the int8 `kv_quant`
+    mode (per-page scale leaves, DESIGN.md §10); cross-KV is written
+    once per admission and read whole, so it stays dense (unpaged) and
+    fp — its bytes are O(enc_len) per request, not O(decoded tokens)."""
+    cache = T.init_cache(cfg, batch_size, max_seq, page_size=page_size,
+                         kv_quant=kv_quant)
     dt = jnp.dtype(cfg.dtype)
     kh, hd = cfg.n_kv_heads, cfg.head_dim_
     enc_len = enc_len or cfg.enc_len
@@ -180,10 +185,11 @@ def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
 
 
 def abstract_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
-                   enc_len: int = 0, page_size=None) -> Dict[str, Any]:
+                   enc_len: int = 0, page_size=None,
+                   kv_quant=None) -> Dict[str, Any]:
     return jax.eval_shape(
         functools.partial(init_cache, cfg, batch_size, max_seq, enc_len,
-                          page_size=page_size))
+                          page_size=page_size, kv_quant=kv_quant))
 
 
 def _cross_kv(cfg: ArchConfig, cross_p: Params, enc_out: jax.Array
@@ -194,8 +200,8 @@ def _cross_kv(cfg: ArchConfig, cross_p: Params, enc_out: jax.Array
     write through."""
     kh, hd = cfg.n_kv_heads, cfg.head_dim_
     b, e, _ = enc_out.shape
-    k = (enc_out @ cross_p["wk"]).reshape(b, e, kh, hd).transpose(0, 2, 1, 3)
-    v = (enc_out @ cross_p["wv"]).reshape(b, e, kh, hd).transpose(0, 2, 1, 3)
+    k = matmul(enc_out, cross_p["wk"]).reshape(b, e, kh, hd).transpose(0, 2, 1, 3)
+    v = matmul(enc_out, cross_p["wv"]).reshape(b, e, kh, hd).transpose(0, 2, 1, 3)
     return k, v
 
 
@@ -274,7 +280,7 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
             q, k, v = T._qkv(cfg, p["attn"], x, positions)
             window = cfg.sliding_window if kind == "local" else 0
             o = ops.flash_attention(q, k, v, causal=True, window=window)
-            x = x + o.reshape(1, p_len, -1) @ p["attn"]["wo"]
+            x = x + matmul(o.reshape(1, p_len, -1), p["attn"]["wo"])
             states[f"k{pos_i}"] = k.transpose(0, 2, 1, 3)   # (1,KH,P,hd)
             states[f"v{pos_i}"] = v.transpose(0, 2, 1, 3)
             x = _cross_attn(cfg, cross_p, x, enc_out)
@@ -304,6 +310,18 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
                                 (0, c.shape[3] - e), (0, 0)))
         else:
             assert p_len <= c.shape[3], (p_len, c.shape)
+            scale_key = key[0] + "scale" + key[1:]
+            if scale_key in cache and pt is not None:
+                # int8 decoder self-KV: per-page quantize-scatter (fresh
+                # scales, previous occupant's junk cleared)
+                ps = c.shape[3] // pt.shape[1]
+                prow = lax.dynamic_slice(pt, (row, 0), (1, pt.shape[1]))[0]
+                vals = val[:, 0].transpose(0, 2, 1, 3)    # (L,P,KH,hd)
+                out_cache[key], out_cache[scale_key] = \
+                    T.quant_kv_write_rows(c, cache[scale_key], vals, row,
+                                          jnp.zeros((), jnp.int32), prow,
+                                          ps)
+                continue
             if pt is not None:
                 # decoder self-KV goes through the row's page table
                 # (DESIGN.md §9) — same scatter as the decoder-only
@@ -366,20 +384,24 @@ def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
         updates = {}
         for pos_i, kind in enumerate(cfg.block_pattern):
             p = bp[pos_i]
+            kv_scales = None
+            if f"kscale{pos_i}" in blk_cache:
+                kv_scales = (blk_cache[f"kscale{pos_i}"],
+                             blk_cache[f"vscale{pos_i}"])
             x, knew, vnew = T._verify_attn(
                 cfg, p["attn"], x, kind,
                 blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos,
-                pages)
+                pages, kv_scales)
             updates[f"knew{pos_i}"] = knew                    # (B,T,KH,hd)
             updates[f"vnew{pos_i}"] = vnew
             hx = L.rms_norm(x, cross_p["ln"], cfg.norm_eps)
-            q = (hx @ cross_p["wq"]).reshape(b, t, cfg.n_heads,
-                                             cfg.head_dim_)
+            q = matmul(hx, cross_p["wq"]).reshape(b, t, cfg.n_heads,
+                                                  cfg.head_dim_)
             outs = [decode_attention_combined(
                 q[:, j:j + 1], blk_cache["cross_k"], blk_cache["cross_v"],
                 cross_pos, n_chunks=1) for j in range(t)]
             o = jnp.concatenate(outs, axis=1)
-            x = x + o.reshape(b, t, -1) @ cross_p["wo"]
+            x = x + matmul(o.reshape(b, t, -1), cross_p["wo"])
             x, _ = T.ffn_layer(cfg, p["ffn"], x, False)
         return x, updates
 
@@ -395,6 +417,16 @@ def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     if pages is not None:
         out_cache["page_table"] = pages
     for pos_i in range(len(cfg.block_pattern)):
+        if f"kscale{pos_i}" in cache:
+            out_cache[f"k{pos_i}"], out_cache[f"kscale{pos_i}"] = \
+                T.quant_verify_kv_update(
+                    cache[f"k{pos_i}"], cache[f"kscale{pos_i}"],
+                    ys[f"knew{pos_i}"], pos, write_mask, pages)
+            out_cache[f"v{pos_i}"], out_cache[f"vscale{pos_i}"] = \
+                T.quant_verify_kv_update(
+                    cache[f"v{pos_i}"], cache[f"vscale{pos_i}"],
+                    ys[f"vnew{pos_i}"], pos, write_mask, pages)
+            continue
         out_cache[f"k{pos_i}"] = T.verify_kv_update(
             cache[f"k{pos_i}"], ys[f"knew{pos_i}"], pos, write_mask, pages)
         out_cache[f"v{pos_i}"] = T.verify_kv_update(
@@ -440,19 +472,24 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
         updates = {}
         for pos_i, kind in enumerate(cfg.block_pattern):
             p = bp[pos_i]
+            kv_scales = None
+            if f"kscale{pos_i}" in blk_cache:
+                kv_scales = (blk_cache[f"kscale{pos_i}"],
+                             blk_cache[f"vscale{pos_i}"])
             x, knew, vnew = T._decode_attn(
                 cfg, p["attn"], x, kind,
                 blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos,
-                pages)
+                pages, kv_scales)
             updates[f"knew{pos_i}"] = knew
             updates[f"vnew{pos_i}"] = vnew
             # cross attention against the (static) encoder KV
             hx = L.rms_norm(x, cross_p["ln"], cfg.norm_eps)
-            q = (hx @ cross_p["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim_)
+            q = matmul(hx, cross_p["wq"]).reshape(b, 1, cfg.n_heads,
+                                                  cfg.head_dim_)
             o = decode_attention_combined(
                 q, blk_cache["cross_k"], blk_cache["cross_v"],
                 cross_pos, n_chunks=1)
-            x = x + o.reshape(b, 1, -1) @ cross_p["wo"]
+            x = x + matmul(o.reshape(b, 1, -1), cross_p["wo"])
             x, _ = T.ffn_layer(cfg, p["ffn"], x, False)
         return x, updates
 
@@ -474,6 +511,16 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
             slot = physical_slots(
                 pages, jnp.broadcast_to(slot.reshape(-1), (b,)),
                 max_seq // pages.shape[1])
+        if f"kscale{pos_i}" in cache:
+            out_cache[f"k{pos_i}"], out_cache[f"kscale{pos_i}"] = \
+                T.quant_kv_update_stacked(
+                    cache[f"k{pos_i}"], cache[f"kscale{pos_i}"],
+                    ys[f"knew{pos_i}"], slot, write_mask)
+            out_cache[f"v{pos_i}"], out_cache[f"vscale{pos_i}"] = \
+                T.quant_kv_update_stacked(
+                    cache[f"v{pos_i}"], cache[f"vscale{pos_i}"],
+                    ys[f"vnew{pos_i}"], slot, write_mask)
+            continue
         if write_mask is not None:
             slot = jnp.broadcast_to(slot.reshape(-1), (b,))
             knew = T.masked_kv_update(cache[f"k{pos_i}"],

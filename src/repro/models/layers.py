@@ -279,8 +279,9 @@ def merge_attention_partials(accs: jax.Array, ms: jax.Array, ls: jax.Array
 
 def gated_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
               w_down: jax.Array) -> jax.Array:
-    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
-    return h @ w_down
+    from repro.models.quantize import matmul
+    h = jax.nn.silu(matmul(x, w_gate)) * matmul(x, w_up)
+    return matmul(h, w_down)
 
 
 def moe_ffn(x: jax.Array, router: jax.Array, w_gate: jax.Array,

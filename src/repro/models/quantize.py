@@ -1,0 +1,68 @@
+"""Weight quantization over a parameter pytree (DESIGN.md §10).
+
+`quantize_params` rewrites every dense 2-D projection weight (with its
+leading n_blocks stack axis) into a block-quantized `QTensor`; everything
+whose numerics are scale-sensitive or whose layout the fused matmul does
+not cover stays fp: embeddings (tied to the logits head), norms, the MoE
+router (f32 on purpose), rank-4 MoE expert stacks (gathered per token,
+not a plain matmul), conv filters, and the SSM's small B/C/dt
+projections (their outputs feed the f32 recurrence, where the block
+grid's error compounds multiplicatively).
+
+`matmul` is the dispatch point the model layers call instead of `@`:
+a QTensor routes through `ops.quant_matmul` (Pallas dequant-fused on
+TPU, dequantized-oracle matmul on CPU), a plain array through the
+ordinary dot.  Because QTensor is a registered pytree, the quantized
+stacks ride `lax.scan` xs and the self-draft's truncated
+`tree.map(lambda a: a[:n], params)` exactly like the dense arrays they
+replace.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.kernels import ops
+from repro.kernels.quant import QTensor, WEIGHT_FORMATS, quantize_tensor
+
+# Dense projection leaves quantized by name (see module docstring for
+# what is deliberately left out).  w_gate/w_up/w_down appear both as
+# dense (L, d, f) FFN stacks (quantized) and rank-4 MoE expert stacks
+# (skipped by the ndim gate below).
+QUANT_WEIGHT_NAMES = frozenset({
+    "wq", "wk", "wv", "wo",              # attention projections
+    "w_gate", "w_up", "w_down",          # dense gated MLP
+    "w_z", "w_x", "out_proj",            # mamba in/out projections
+})
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            return p.key
+    return ""
+
+
+def quantize_params(params: Any, fmt: str) -> Any:
+    """Quantize every eligible projection leaf of a stacked parameter
+    pytree into `fmt` ("q8_0" | "q4_k").  Leaves are matched by their
+    innermost dict key plus a rank gate (stacked dense projections are
+    rank 3; rank-4 MoE expert stacks stay fp)."""
+    assert fmt in WEIGHT_FORMATS, fmt
+
+    def one(path, leaf):
+        if _leaf_name(path) in QUANT_WEIGHT_NAMES and leaf.ndim == 3:
+            return quantize_tensor(leaf, fmt)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def matmul(x: jax.Array, w: Any) -> jax.Array:
+    """`x @ w` with quantized-weight dispatch: a QTensor runs the
+    dequant-fused matmul (packed blocks are the only weight bytes read),
+    a dense array the plain dot."""
+    if isinstance(w, QTensor):
+        return ops.quant_matmul(x, w)
+    return x @ w

@@ -18,6 +18,7 @@ from jax import lax
 
 from repro.models import layers as L
 from repro.models.config import ArchConfig
+from repro.models.quantize import matmul
 from repro.sharding import constrain
 
 Params = Dict[str, Any]
@@ -134,9 +135,9 @@ def _qkv(cfg: ArchConfig, p: Params, x: jax.Array,
     b, s, _ = x.shape
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     hx = L.rms_norm(x, p["ln"], cfg.norm_eps)
-    q = (hx @ p["wq"]).reshape(b, s, h, hd)
-    k = (hx @ p["wk"]).reshape(b, s, kh, hd)
-    v = (hx @ p["wv"]).reshape(b, s, kh, hd)
+    q = matmul(hx, p["wq"]).reshape(b, s, h, hd)
+    k = matmul(hx, p["wk"]).reshape(b, s, kh, hd)
+    v = matmul(hx, p["wv"]).reshape(b, s, kh, hd)
     if cfg.mrope:
         pos3 = jnp.broadcast_to(positions[..., None], positions.shape + (3,))
         q = L.apply_mrope(q, pos3, cfg.rope_theta, _mrope_sections(hd))
@@ -165,7 +166,7 @@ def attn_layer(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
     else:
         o = L.blocked_attention(q, k, v, causal=True)
     o = o.reshape(b, s, cfg.n_heads * cfg.head_dim_)
-    return x + o @ p["wo"]
+    return x + matmul(o, p["wo"])
 
 
 def ffn_layer(cfg: ArchConfig, p: Params, x: jax.Array, moe: bool
@@ -188,8 +189,8 @@ def _mamba_proj(cfg: ArchConfig, p: Params, x: jax.Array):
     decode / prefill variants, which differ only in how they run the
     conv + SSD recurrence."""
     hx = L.rms_norm(x, p["ln"], cfg.norm_eps)
-    z = jax.nn.silu(hx @ p["w_z"])
-    xin = hx @ p["w_x"]
+    z = jax.nn.silu(matmul(hx, p["w_z"]))
+    xin = matmul(hx, p["w_x"])
     Bm = hx @ p["w_B"]
     Cm = hx @ p["w_C"]
     dt = jax.nn.softplus((hx @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
@@ -206,7 +207,7 @@ def mamba_layer(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
     y = y + (xc.reshape(b, s, nh, hp)
              * p["D"][None, None, :, None].astype(xc.dtype))
     y = (y.reshape(b, s, -1) * z).astype(x.dtype)
-    return x + y @ p["out_proj"]
+    return x + matmul(y, p["out_proj"])
 
 
 # --------------------------------------------------------------------------
@@ -302,7 +303,8 @@ def default_page_size(max_seq: int) -> int:
 
 def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
                dtype: Optional[str] = None,
-               page_size: Optional[int] = None) -> Dict[str, Any]:
+               page_size: Optional[int] = None,
+               kv_quant: Optional[str] = None) -> Dict[str, Any]:
     """Per-pattern-position caches stacked over n_blocks.
 
     Caches with attention layers also carry a `"page_table"` leaf
@@ -311,20 +313,38 @@ def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
     row `b` lives at physical row `table[b, r // page] * page + r % page`
     of the SAME dense (B, KH, S, hd) panels; the identity table (the
     init value here) makes every paged code path bitwise the dense one.
-    `page_size` must divide max_seq (default: `default_page_size`)."""
+    `page_size` must divide max_seq (default: `default_page_size`).
+
+    `kv_quant="int8"` stores the self-attention K/V panels as int8 pools
+    with one symmetric f32 scale per (layer, row, kv-head, PHYSICAL
+    page): leaves `kscale{pos}`/`vscale{pos}` of shape
+    (L, B, KH, n_pages), riding the layer scan and the host-tier
+    extract/insert alongside the panels they scale (DESIGN.md §10).
+    Recurrent (conv/ssm) state and cross-KV stay fp — they have no page
+    structure to hang a scale on and their bytes are O(1) per request."""
     dt = jnp.dtype(dtype or cfg.dtype)
     nb, b = cfg.n_blocks, batch_size
     kh, hd = cfg.n_kv_heads, cfg.head_dim_
+    assert kv_quant in (None, "int8"), kv_quant
+    has_attn = any(k in ("full", "local") for k in cfg.block_pattern)
+    ps = 0
+    if has_attn:
+        ps = page_size or default_page_size(max_seq)
+        assert max_seq % ps == 0, (max_seq, ps)
+    kv_dt = jnp.int8 if kv_quant else dt
     cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
-    has_attn = False
     for pos, kind in enumerate(cfg.block_pattern):
         if kind in ("full", "local"):
-            has_attn = True
             # flash-decoding layout (B, KH, S, hd): contiguous (S, hd)
             # panels per kv head — decode dots read the cache in place
             # (§Perf iteration D2)
-            cache[f"k{pos}"] = jnp.zeros((nb, b, kh, max_seq, hd), dt)
-            cache[f"v{pos}"] = jnp.zeros((nb, b, kh, max_seq, hd), dt)
+            cache[f"k{pos}"] = jnp.zeros((nb, b, kh, max_seq, hd), kv_dt)
+            cache[f"v{pos}"] = jnp.zeros((nb, b, kh, max_seq, hd), kv_dt)
+            if kv_quant:
+                cache[f"kscale{pos}"] = jnp.zeros(
+                    (nb, b, kh, max_seq // ps), jnp.float32)
+                cache[f"vscale{pos}"] = jnp.zeros(
+                    (nb, b, kh, max_seq // ps), jnp.float32)
         elif kind == "mamba":
             cache[f"conv{pos}"] = jnp.zeros(
                 (nb, b, cfg.conv_width - 1, cfg.d_inner), dt)
@@ -332,18 +352,23 @@ def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
                 (nb, b, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
                 jnp.float32)
     if has_attn:
-        ps = page_size or default_page_size(max_seq)
-        assert max_seq % ps == 0, (max_seq, ps)
         cache["page_table"] = jnp.tile(
             jnp.arange(max_seq // ps, dtype=jnp.int32)[None], (b, 1))
     return cache
 
 
 def abstract_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
-                   page_size: Optional[int] = None) -> Dict[str, Any]:
+                   page_size: Optional[int] = None,
+                   kv_quant: Optional[str] = None) -> Dict[str, Any]:
     return jax.eval_shape(
         functools.partial(init_cache, cfg, batch_size, max_seq,
-                          page_size=page_size))
+                          page_size=page_size, kv_quant=kv_quant))
+
+
+def cache_kv_quant(cache: Dict[str, Any]) -> Optional[str]:
+    """The cache's KV quantization mode, detected from its scale leaves
+    (static: dict keys only)."""
+    return "int8" if any(_is_kv_scale(k) for k in cache) else None
 
 
 def cache_page_size(cache: Dict[str, Any]) -> int:
@@ -359,6 +384,7 @@ def cache_page_size(cache: Dict[str, Any]) -> int:
 def _decode_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
                  k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array,
                  pages: Optional[jax.Array] = None,
+                 kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One-token attention against the cache.  The cache is sharded over the
     sequence axis (flash-decoding): each shard produces a partial-softmax
@@ -388,11 +414,12 @@ def _decode_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
     extra = L.single_kv_partial(q, k_new, v_new)
     window = cfg.sliding_window if kind == "local" else 0
     # cache holds tokens [0, pos); the current token arrives via `extra`
+    # (always fp — its KV has not been quantized-written yet)
     o = decode_attention_combined(q, k_cache, v_cache, pos - 1,
                                   window=max(0, window - 1), extra=extra,
-                                  pages=pages)
+                                  pages=pages, kv_scales=kv_scales)
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim_)
-    return (x + o @ p["wo"], k_new.transpose(0, 2, 1, 3),
+    return (x + matmul(o, p["wo"]), k_new.transpose(0, 2, 1, 3),
             v_new.transpose(0, 2, 1, 3))
 
 
@@ -409,7 +436,7 @@ def _decode_mamba(cfg: ArchConfig, p: Params, x: jax.Array,
     y = y + (xc[:, 0].reshape(b, nh, hp)
              * p["D"][None, :, None].astype(xc.dtype))
     y = (y.reshape(b, 1, -1) * z).astype(x.dtype)
-    return x + y @ p["out_proj"], conv_state, ssm_state
+    return x + matmul(y, p["out_proj"]), conv_state, ssm_state
 
 
 def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
@@ -461,10 +488,14 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
         for pos_i, kind in enumerate(cfg.block_pattern):
             p = block_params[pos_i]
             if kind in ("full", "local"):
+                kv_scales = None
+                if f"kscale{pos_i}" in blk_cache:
+                    kv_scales = (blk_cache[f"kscale{pos_i}"],
+                                 blk_cache[f"vscale{pos_i}"])
                 x, knew, vnew = _decode_attn(
                     cfg, p["attn"], x, kind,
                     blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos,
-                    pages)
+                    pages, kv_scales)
                 updates[f"knew{pos_i}"] = knew
                 updates[f"vnew{pos_i}"] = vnew
             elif kind == "mamba":
@@ -496,6 +527,18 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
                 slot = physical_slots(
                     pages, jnp.broadcast_to(slot.reshape(-1), (b,)),
                     max_seq // pages.shape[1])
+            if f"kscale{pos_i}" in cache:
+                # int8 pool: quantize-write the token (page-scale merge +
+                # masked-row freeze handled inside)
+                out_cache[f"k{pos_i}"], out_cache[f"kscale{pos_i}"] = \
+                    quant_kv_update_stacked(
+                        cache[f"k{pos_i}"], cache[f"kscale{pos_i}"],
+                        ys[f"knew{pos_i}"], slot, write_mask)
+                out_cache[f"v{pos_i}"], out_cache[f"vscale{pos_i}"] = \
+                    quant_kv_update_stacked(
+                        cache[f"v{pos_i}"], cache[f"vscale{pos_i}"],
+                        ys[f"vnew{pos_i}"], slot, write_mask)
+                continue
             if write_mask is not None:
                 # per-row ring write; masked rows re-write their slot's
                 # OLD value (token-sized gather+select, not a full-cache
@@ -527,6 +570,7 @@ def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
 def _verify_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
                  k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array,
                  pages: Optional[jax.Array] = None,
+                 kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,
                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """T-position attention for the speculative verify forward
     (DESIGN.md §7): x is (B, T, D) — the current token plus T-1 draft
@@ -560,10 +604,27 @@ def _verify_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
         # translate the logical ring slots through the row's table
         slots = physical_slots(pages, slots, s // pages.shape[1])
     bidx = jnp.arange(b)[:, None]
-    # advanced-index scatter: (bidx, slots) broadcast to (B,T), so the
-    # target slice is (B,T,KH,hd) — k_new/v_new's native layout
-    kc = k_cache.at[bidx, :, slots, :].set(k_new.astype(k_cache.dtype))
-    vc = v_cache.at[bidx, :, slots, :].set(v_new.astype(v_cache.dtype))
+    if kv_scales is not None:
+        # int8 local copy: T sequential quantize-writes (with a dummy
+        # leading layer axis) so each draft row lands under exactly the
+        # page scale its sequential decode would have produced
+        kcq, kscq = k_cache[None], kv_scales[0][None]
+        vcq, vscq = v_cache[None], kv_scales[1][None]
+        for j in range(t):
+            kcq, kscq = quant_kv_update_stacked(
+                kcq, kscq, k_new[:, j:j + 1].transpose(0, 2, 1, 3)[None],
+                slots[:, j])
+            vcq, vscq = quant_kv_update_stacked(
+                vcq, vscq, v_new[:, j:j + 1].transpose(0, 2, 1, 3)[None],
+                slots[:, j])
+        kc, vc = kcq[0], vcq[0]
+        read_scales = (kscq[0], vscq[0])
+    else:
+        # advanced-index scatter: (bidx, slots) broadcast to (B,T), so the
+        # target slice is (B,T,KH,hd) — k_new/v_new's native layout
+        kc = k_cache.at[bidx, :, slots, :].set(k_new.astype(k_cache.dtype))
+        vc = v_cache.at[bidx, :, slots, :].set(v_new.astype(v_cache.dtype))
+        read_scales = None
     window = cfg.sliding_window if kind == "local" else 0
     outs = []
     for j in range(t):
@@ -571,10 +632,11 @@ def _verify_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
                                     v_new[:, j:j + 1])
         outs.append(decode_attention_combined(
             q[:, j:j + 1], kc, vc, pos + j - 1,
-            window=max(0, window - 1), extra=extra, pages=pages))
+            window=max(0, window - 1), extra=extra, pages=pages,
+            kv_scales=read_scales))
     o = jnp.concatenate(outs, axis=1)                         # (B,T,H,hd)
     o = o.reshape(b, t, cfg.n_heads * cfg.head_dim_)
-    return x + o @ p["wo"], k_new, v_new
+    return x + matmul(o, p["wo"]), k_new, v_new
 
 
 def _verify_mamba(cfg: ArchConfig, p: Params, x: jax.Array,
@@ -615,7 +677,7 @@ def _verify_mamba(cfg: ArchConfig, p: Params, x: jax.Array,
     y = y + (xc.reshape(b, t, nh, hp)
              * p["D"][None, None, :, None].astype(xc.dtype))
     y = (y.reshape(b, t, -1) * z).astype(x.dtype)
-    return x + y @ p["out_proj"], conv_snaps, ssm_snaps
+    return x + matmul(y, p["out_proj"]), conv_snaps, ssm_snaps
 
 
 def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
@@ -663,10 +725,14 @@ def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
         for pos_i, kind in enumerate(cfg.block_pattern):
             p = block_params[pos_i]
             if kind in ("full", "local"):
+                kv_scales = None
+                if f"kscale{pos_i}" in blk_cache:
+                    kv_scales = (blk_cache[f"kscale{pos_i}"],
+                                 blk_cache[f"vscale{pos_i}"])
                 x, knew, vnew = _verify_attn(
                     cfg, p["attn"], x, kind,
                     blk_cache[f"k{pos_i}"], blk_cache[f"v{pos_i}"], pos,
-                    pages)
+                    pages, kv_scales)
                 updates[f"knew{pos_i}"] = knew                # (B,T,KH,hd)
                 updates[f"vnew{pos_i}"] = vnew
             elif kind == "mamba":
@@ -689,6 +755,16 @@ def decode_verify(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
     snaps: Dict[str, Any] = {}
     for pos_i, kind in enumerate(cfg.block_pattern):
         if kind in ("full", "local"):
+            if f"kscale{pos_i}" in cache:
+                out_cache[f"k{pos_i}"], out_cache[f"kscale{pos_i}"] = \
+                    quant_verify_kv_update(
+                        cache[f"k{pos_i}"], cache[f"kscale{pos_i}"],
+                        ys[f"knew{pos_i}"], pos, write_mask, pages)
+                out_cache[f"v{pos_i}"], out_cache[f"vscale{pos_i}"] = \
+                    quant_verify_kv_update(
+                        cache[f"v{pos_i}"], cache[f"vscale{pos_i}"],
+                        ys[f"vnew{pos_i}"], pos, write_mask, pages)
+                continue
             out_cache[f"k{pos_i}"] = verify_kv_update(
                 cache[f"k{pos_i}"], ys[f"knew{pos_i}"], pos, write_mask,
                 pages)
@@ -742,6 +818,170 @@ def masked_kv_update(cache: jax.Array, new: jax.Array, slot_b: jax.Array,
                      new, old.astype(new.dtype))
 
 
+# --------------------------------------------------------------------------
+# Int8 KV cache writes (DESIGN.md §10)
+# --------------------------------------------------------------------------
+#
+# Invariant: the fp value of cached row r is quants[r] * scale[page(r)].
+# A page's scale only ever grows while the page is live (a new token with
+# a larger absmax re-quantizes the page's existing rows to the merged
+# scale), and a page whose FIRST row is being written gets a fresh scale
+# — which simultaneously clears the previous occupant's junk (rescale
+# ratio 0).  When the incoming token fits under the current scale the
+# ratio is exactly 1.0 and the re-quantization round-trips bitwise, so
+# steady-state decode touches only the token's own row.
+
+_SCALE_EPS = 1e-30
+
+
+def quant_kv_update_stacked(pool: jax.Array, scales: jax.Array,
+                            new: jax.Array, slot_b: jax.Array,
+                            write_mask: Optional[jax.Array] = None
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """One-token ring write into an int8 KV pool — the quantized twin of
+    `cache_update_stacked` (+ `masked_kv_update`).  pool: (L,B,KH,S,hd)
+    int8; scales: (L,B,KH,nP) f32 per PHYSICAL page; new: (L,B,KH,1,hd)
+    fp; slot_b: scalar or (B,) PHYSICAL rows (the caller translates
+    logical→physical through the page table first, exactly as for the fp
+    scatter); write_mask: (B,) bool or None — masked rows leave pool and
+    scale bitwise untouched.  Returns (pool, scales)."""
+    l, b, kh, s, hd = pool.shape
+    n_p = scales.shape[3]
+    ps = s // n_p
+    slot_b = jnp.broadcast_to(
+        jnp.asarray(slot_b, jnp.int32).reshape(-1), (b,))
+    page = slot_b // ps                                   # (B,) physical
+    off = slot_b % ps
+    bidx = jnp.arange(b)
+    newf = new.astype(jnp.float32)[:, :, :, 0]            # (L,B,KH,hd)
+    cand = jnp.max(jnp.abs(newf), axis=-1) / 127.0        # (L,B,KH)
+    # non-adjacent advanced indices (axes 1, 3) put the broadcast (B,)
+    # dim first: (B,L,KH)
+    old_s = scales[:, bidx, :, page].transpose(1, 0, 2)   # (L,B,KH)
+    new_s = jnp.maximum(old_s, cand)
+    if write_mask is not None:
+        new_s = jnp.where(write_mask[None, :, None], new_s, old_s)
+    # ratio 1.0 exactly when the scale is unchanged (old/old), 0 when the
+    # page was empty (old 0) — clearing junk under the fresh scale
+    r = old_s / jnp.maximum(new_s, _SCALE_EPS)
+    rows = page[:, None] * ps + jnp.arange(ps, dtype=jnp.int32)[None]
+    blk = pool[:, bidx[:, None], :, rows]                 # (B,ps,L,KH,hd)
+    blk_r = jnp.rint(blk.astype(jnp.float32)
+                     * r.transpose(1, 0, 2)[:, None, :, :, None])
+    q_tok = jnp.clip(
+        jnp.rint(newf / jnp.maximum(new_s, _SCALE_EPS)[..., None]),
+        -127, 127)                                        # (L,B,KH,hd)
+    tok = q_tok.transpose(1, 0, 2, 3)                     # (B,L,KH,hd)
+    if write_mask is not None:
+        old_tok = jnp.take_along_axis(
+            blk, off[:, None, None, None, None], axis=1)[:, 0]
+        tok = jnp.where(write_mask[:, None, None, None],
+                        tok, old_tok.astype(tok.dtype))
+    sel = jnp.arange(ps)[None, :] == off[:, None]         # (B,ps)
+    blk_new = jnp.where(sel[:, :, None, None, None], tok[:, None], blk_r)
+    blk_new = jnp.clip(blk_new, -127, 127).astype(pool.dtype)
+    pool = pool.at[:, bidx[:, None], :, rows].set(blk_new)
+    scales = scales.at[:, bidx, :, page].set(new_s.transpose(1, 0, 2))
+    return pool, scales
+
+
+def quant_verify_kv_update(pool: jax.Array, scales: jax.Array,
+                           new: jax.Array, pos: jax.Array,
+                           write_mask: Optional[jax.Array],
+                           pages: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """T-token ring write into an int8 pool — the quantized twin of
+    `verify_kv_update`, unrolled as T sequential one-token updates so
+    each draft row sees exactly the page scale its sequential decode
+    would (T is the spec chunk, <= K+1, so the unroll is tiny).  new:
+    (L,B,T,KH,hd); pos: (B,) logical slot of row 0."""
+    from repro.core.backstream import physical_slots
+    s = pool.shape[3]
+    t = new.shape[2]
+    for j in range(t):
+        slot = (pos + j) % s
+        if pages is not None:
+            slot = physical_slots(pages, slot, s // pages.shape[1])
+        pool, scales = quant_kv_update_stacked(
+            pool, scales, new[:, :, j][:, :, :, None, :], slot, write_mask)
+    return pool, scales
+
+
+def quant_kv_write_rows(pool: jax.Array, scales: jax.Array,
+                        vals: jax.Array, row: jax.Array, start: jax.Array,
+                        prow: jax.Array, ps: int
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter T consecutive LOGICAL rows [start, start+T) of batch row
+    `row` into an int8 pool + per-page scales — the quantized prefill /
+    resume scatter.  pool: (L,B,KH,S,hd) int8; scales: (L,B,KH,nP);
+    vals: (L,T,KH,hd) fp; row, start: traced scalars; prow: (nP,) the
+    row's logical→physical page map; ps: static page size.
+
+    Page scale rule: a page whose first logical row is at or past
+    `start` is wholly (re)written by this call → fresh scale, previous
+    junk cleared (ratio 0); the boundary page (start % ps != 0, resume
+    only) merges with the restored prefix's scale and re-quantizes the
+    prefix rows it keeps.  Junk past the written span stays beyond the
+    validity clock as in the fp path."""
+    l, b, kh, s, hd = pool.shape
+    n_p = scales.shape[3]
+    t = vals.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    row = jnp.asarray(row, jnp.int32)
+    npt = -(-t // ps) + 1                 # candidate pages incl. boundary
+    lrows = start + jnp.arange(t, dtype=jnp.int32)        # (T,)
+    p0 = start // ps
+    pages_t = p0 + jnp.arange(npt, dtype=jnp.int32)       # (npt,) logical
+    in_page = pages_t[:, None] == (lrows[None, :] // ps)  # (npt,T)
+    live = (pages_t * ps < start + t) & (pages_t < n_p)   # actually touched
+    vf = vals.astype(jnp.float32)                         # (L,T,KH,hd)
+    amax = jnp.max(jnp.abs(vf), axis=-1)                  # (L,T,KH)
+    cand = jnp.max(jnp.where(in_page[None, :, :, None],
+                             amax[:, None], 0.0), axis=2) / 127.0  # (L,npt,KH)
+    phys_t = jnp.take(prow, jnp.clip(pages_t, 0, n_p - 1))         # (npt,)
+    sc_row = lax.dynamic_slice(
+        scales, (0, row, 0, 0), (l, 1, kh, n_p))[:, 0]    # (L,KH,nP)
+    old = jnp.take(sc_row, phys_t, axis=2).transpose(0, 2, 1)      # (L,npt,KH)
+    fresh = pages_t * ps >= start                         # (npt,)
+    eff_old = jnp.where(fresh[None, :, None], 0.0, old)
+    new_s = jnp.maximum(eff_old, cand)
+    r = eff_old / jnp.maximum(new_s, _SCALE_EPS)
+    rows_ph = (phys_t[:, None] * ps
+               + jnp.arange(ps, dtype=jnp.int32)[None])   # (npt,ps)
+    pool_row = lax.dynamic_slice(
+        pool, (0, row, 0, 0, 0), (l, 1, kh, s, hd))[:, 0]  # (L,KH,S,hd)
+    blk = jnp.take(pool_row, rows_ph.reshape(-1),
+                   axis=2).reshape(l, kh, npt, ps, hd)
+    blk_r = jnp.rint(blk.astype(jnp.float32)
+                     * r.transpose(0, 2, 1)[:, :, :, None, None])
+    # quantize each new row under its own page's merged scale
+    pi = jnp.clip(lrows // ps - p0, 0, npt - 1)           # (T,)
+    scale_t = jnp.take_along_axis(
+        new_s, pi[None, :, None], axis=1)                 # (L,T,KH)
+    q_rows = jnp.clip(
+        jnp.rint(vf / jnp.maximum(scale_t, _SCALE_EPS)[..., None]),
+        -127, 127)                                        # (L,T,KH,hd)
+    glob = pages_t[:, None] * ps + jnp.arange(ps)[None]   # (npt,ps) logical
+    onehot = (glob[:, :, None] == lrows[None, None, :])   # (npt,ps,T)
+    contrib = jnp.einsum("abt,ltkd->lkabd",
+                         onehot.astype(jnp.float32), q_rows)
+    written = onehot.any(axis=2)                          # (npt,ps)
+    blk_new = jnp.where(written[None, None, :, :, None], contrib, blk_r)
+    blk_new = jnp.clip(blk_new, -127, 127).astype(pool.dtype)
+    # untouched candidate pages scatter out of bounds and are dropped
+    rows_sc = jnp.where(live[:, None], rows_ph, s).reshape(-1)
+    pool_row = pool_row.at[:, :, rows_sc].set(
+        blk_new.reshape(l, kh, npt * ps, hd), mode="drop")
+    pool = lax.dynamic_update_slice(
+        pool, pool_row[:, None], (0, row, 0, 0, 0))
+    sc_sc = jnp.where(live, phys_t, n_p)
+    sc_row = sc_row.at[:, :, sc_sc].set(
+        new_s.transpose(0, 2, 1), mode="drop")
+    scales = lax.dynamic_update_slice(
+        scales, sc_row[:, None], (0, row, 0, 0))
+    return pool, scales
+
+
 def supports_prefill_into_cache(cfg: ArchConfig) -> bool:
     """Every registered architecture has a real prompt-prefill path into
     the continuous-batching decode cache: attention layers capture per-
@@ -790,7 +1030,7 @@ def _prefill_mamba(cfg: ArchConfig, p: Params, x: jax.Array,
     y = y + (xc.reshape(b, s, nh, hp)
              * p["D"][None, None, :, None].astype(xc.dtype))
     y = (y.reshape(b, s, -1) * z).astype(x.dtype)
-    return x + y @ p["out_proj"], conv_state, ssm_state
+    return x + matmul(y, p["out_proj"]), conv_state, ssm_state
 
 
 def prefill_into_cache(cfg: ArchConfig, params: Params,
@@ -827,7 +1067,7 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
                 window = cfg.sliding_window if kind == "local" else 0
                 o = ops.flash_attention(q, k, v, causal=True, window=window)
                 o = o.reshape(1, p_len, cfg.n_heads * cfg.head_dim_)
-                x = x + o @ p["attn"]["wo"]
+                x = x + matmul(o, p["attn"]["wo"])
                 states[f"k{pos_i}"] = k.transpose(0, 2, 1, 3)  # (1,KH,P,hd)
                 states[f"v{pos_i}"] = v.transpose(0, 2, 1, 3)
             elif kind == "mamba":
@@ -855,6 +1095,19 @@ def prefill_into_cache(cfg: ArchConfig, params: Params,
             keys = (f"conv{pos_i}", f"ssm{pos_i}")
         for key in keys:
             c = cache[key]
+            scale_key = key[0] + "scale" + key[1:] if _is_self_kv(key) \
+                else None
+            if scale_key is not None and scale_key in cache:
+                # int8 pool: per-page quantize-scatter of the P prompt
+                # rows; every touched page starts fresh (start = 0), so
+                # the previous occupant's quants AND scale are cleared
+                ps = max_seq // pt.shape[1]
+                prow = lax.dynamic_slice(pt, (row, 0), (1, pt.shape[1]))[0]
+                vals = states[key][:, 0].transpose(0, 2, 1, 3)  # (L,P,KH,hd)
+                out_cache[key], out_cache[scale_key] = quant_kv_write_rows(
+                    c, cache[scale_key], vals, row,
+                    jnp.zeros((), jnp.int32), prow, ps)
+                continue
             upd = states[key].astype(c.dtype)
             if pt is not None and _is_self_kv(key):
                 # scatter the P prompt rows through row's page table:
@@ -882,6 +1135,12 @@ def _is_self_kv(key: str) -> bool:
     """Self-attention KV leaves are named k{pos}/v{pos}; conv{pos},
     ssm{pos}, cross_k/cross_v and enc_pos are everything else."""
     return key[0] in ("k", "v") and key[1:].isdigit()
+
+
+def _is_kv_scale(key: str) -> bool:
+    """Per-page scale leaves of an int8 KV cache: kscale{pos}/vscale{pos}
+    (DESIGN.md §10)."""
+    return key[:6] in ("kscale", "vscale") and key[6:].isdigit()
 
 
 def extract_slot_cache(cfg: ArchConfig, cache: Dict[str, Any],
@@ -922,6 +1181,17 @@ def extract_slot_cache(cfg: ArchConfig, cache: Dict[str, Any],
         sizes = (leaf.shape[0], 1) + leaf.shape[2:]
         sl = lax.dynamic_slice(
             leaf, (0, row) + (0,) * (leaf.ndim - 2), sizes)
+        if _is_kv_scale(key) and pt is not None:
+            # per-page scales travel with their pages: gather to LOGICAL
+            # page order (axis 3 is the physical page axis) and truncate
+            # to the same ceil(upto/ps) pages as the KV page set
+            prow = lax.dynamic_slice(pt, (row, 0), (1, pt.shape[1]))[0]
+            sl = jnp.take(sl, prow, axis=3)
+            if upto is not None:
+                ps = cache["k" + key[6:]].shape[3] // leaf.shape[3]
+                sl = sl[:, :, :, :-(-upto // ps)]
+            out[key] = sl
+            continue
         if _is_self_kv(key) and pt is not None:
             n_p = pt.shape[1]
             l, _, kh, s, hd = leaf.shape
@@ -964,6 +1234,14 @@ def insert_slot_cache(cfg: ArchConfig, cache: Dict[str, Any],
         val = jnp.asarray(val).astype(c.dtype)
         if c.ndim == 1:
             out[key] = lax.dynamic_update_slice(c, val, (row,))
+        elif _is_kv_scale(key) and pt is not None:
+            # logical-order scale set → scatter through the DEST row's
+            # page table, mirroring the KV page-set scatter below
+            n_p = c.shape[3]
+            prow = lax.dynamic_slice(pt, (row, 0), (1, n_p))[0]
+            n_sel = val.shape[3]
+            out[key] = c.at[:, row, :, prow[:n_sel]].set(
+                val[:, 0].transpose(2, 0, 1))
         elif _is_self_kv(key) and pt is not None:
             l, b, kh, s, hd = c.shape
             n_p = pt.shape[1]
@@ -1079,7 +1357,7 @@ def _resume_mamba(cfg: ArchConfig, p: Params, x: jax.Array,
     y = y + (xc.reshape(b, s, nh, hp)
              * p["D"][None, None, :, None].astype(xc.dtype))
     y = (y.reshape(b, s, -1) * z).astype(x.dtype)
-    return x + y @ p["out_proj"], conv_state, ssm_state
+    return x + matmul(y, p["out_proj"]), conv_state, ssm_state
 
 
 def resume_prefill_into_cache(cfg: ArchConfig, params: Params,
@@ -1132,6 +1410,13 @@ def resume_prefill_into_cache(cfg: ArchConfig, params: Params,
                 q, k, v = _qkv(cfg, p["attn"], x, positions)
                 window = cfg.sliding_window if kind == "local" else 0
                 k_row, v_row = blk_row[f"k{pos_i}"], blk_row[f"v{pos_i}"]
+                if f"kscale{pos_i}" in blk_row:
+                    # int8 page set: dequantize under the restored
+                    # per-page scales (logical order matches the pages)
+                    k_row = (k_row.astype(jnp.float32)
+                             * blk_row[f"kscale{pos_i}"][..., None, None])
+                    v_row = (v_row.astype(jnp.float32)
+                             * blk_row[f"vscale{pos_i}"][..., None, None])
                 if k_row.ndim == 5:                   # (1,KH,n_p,ps,hd)
                     k_row = k_row.reshape(k_row.shape[:2] + (-1,)
                                           + k_row.shape[4:])
@@ -1139,7 +1424,7 @@ def resume_prefill_into_cache(cfg: ArchConfig, params: Params,
                                           + v_row.shape[4:])
                 o = _resume_attention(cfg, q, k, v, k_row, v_row,
                                       start, window)
-                x = x + o.reshape(1, t_len, -1) @ p["attn"]["wo"]
+                x = x + matmul(o.reshape(1, t_len, -1), p["attn"]["wo"])
                 states[f"k{pos_i}"] = k.transpose(0, 2, 1, 3)
                 states[f"v{pos_i}"] = v.transpose(0, 2, 1, 3)
             elif kind == "mamba":
@@ -1164,6 +1449,21 @@ def resume_prefill_into_cache(cfg: ArchConfig, params: Params,
             # suffix KV rows land at logical sequence offset `start`
             for key in (f"k{pos_i}", f"v{pos_i}"):
                 c = cache[key]
+                scale_key = key[0] + "scale" + key[1:]
+                if scale_key in cache:
+                    # int8 pool: quantize-scatter the suffix; the
+                    # boundary page merges with the restored prefix's
+                    # scale, later pages start fresh
+                    s = c.shape[3]
+                    ps = s // pt.shape[1]
+                    prow = lax.dynamic_slice(
+                        pt, (row, 0), (1, pt.shape[1]))[0]
+                    vals = states[key][:, 0].transpose(0, 2, 1, 3)
+                    c, sc = quant_kv_write_rows(
+                        c, cache[scale_key], vals, row, start, prow, ps)
+                    out_cache[key] = c
+                    out_cache[scale_key] = sc
+                    continue
                 if pt is not None:
                     s = c.shape[3]
                     ps = s // pt.shape[1]

@@ -273,6 +273,66 @@ def test_evicted_stream_bitwise_per_token_mode():
     assert off.restores + off.restored_dead == off.evictions
 
 
+def _serve_spec(arch, *, host_offload, quant_kv=None):
+    from repro.launch import steps as steps_lib
+    from repro.launch.serve import BatchedServer
+    quant = (steps_lib.QuantConfig(kv=quant_kv) if quant_kv else None)
+    server = BatchedServer(arch, smoke=True, batch_slots=2, max_seq=64,
+                           seg_len=4, protocol="bs", stream=True,
+                           spec=True, spec_k=2, draft_arch="self:1",
+                           host_offload=host_offload, evict_after=1,
+                           quant=quant)
+    for r in _offload_workload(server.cfg, 6, sampled=False):
+        server.submit(r)
+    server.run_until_drained(max_steps=100_000)
+    return server
+
+
+@pytest.mark.parametrize("arch", ["starcoder2_3b", "whisper_large_v3"])
+def test_evicted_spec_stream_bitwise(arch):
+    """Regression (PR 9 bugfix): speculative decoding + host offload
+    used to be rejected by a composition assert because eviction only
+    snapshotted the TARGET slot, orphaning the draft's cache rows.  The
+    two now move as one paired page set (draft pages ride the snapshot
+    under a "draft/" key prefix; DESIGN.md §8.5), so an evicted spec
+    stream is bitwise identical to the never-evicting spec server, with
+    the same eviction-accounting closure as plain decode."""
+    base = _serve_spec(arch, host_offload=False)
+    off = _serve_spec(arch, host_offload=True)
+
+    got_b = {r.rid: tuple(r.generated) for r in base.completed}
+    got_o = {r.rid: tuple(r.generated) for r in off.completed}
+    assert got_o == got_b, {
+        r: (got_b[r], got_o.get(r)) for r in got_b
+        if got_b[r] != got_o.get(r)}
+    # eviction AND speculation both actually exercised
+    assert off.evictions > 0
+    assert any(r.suspensions > 0 for r in off.completed)
+    assert off.draft_accepted > 0
+    # acceptance counters survive eviction (dead-while-evicted rows are
+    # stamped from the saved SlotState at restore time)
+    assert sum(r.spec_proposed for r in off.completed) > 0
+    # closure: every eviction restored or found dead, host tier drained
+    assert off.restores + off.restored_dead == off.evictions
+    assert len(off.completed) == 6
+    assert not off.suspended and len(off.host_tier) == 0
+    assert off.host_tier.bytes_evicted == off.host_tier.bytes_restored
+    # the page ledger closes across spec worst-case charges + trims
+    assert off.pages_allocated == off.pages_freed
+
+
+def test_evicted_spec_stream_int8_kv_drains():
+    """Spec + offload + int8 KV compose (run-only: rejected-token page
+    rescales persist in the quantized cache, so bitwise equality with
+    the fp spec stream is NOT an invariant here — DESIGN.md §10)."""
+    off = _serve_spec("starcoder2_3b", host_offload=True, quant_kv="int8")
+    assert len(off.completed) == 6
+    assert off.evictions > 0
+    assert all(len(r.generated) > 0 for r in off.completed)
+    assert off.restores + off.restored_dead == off.evictions
+    assert off.pages_allocated == off.pages_freed
+
+
 # -- prefix-cache reuse ----------------------------------------------------
 
 @pytest.mark.parametrize("arch", ["starcoder2_3b", "mamba2_370m",

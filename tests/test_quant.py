@@ -1,0 +1,274 @@
+"""Quantized serving tests (DESIGN.md §10).
+
+Tolerance tiers, mirroring the kernel suites:
+
+  * bound      — |dequant(quant(w)) - w| <= quant_error_bound(fmt, scales)
+                 element-wise, for every eligible weight leaf of every
+                 arch's smoke config, plus a ragged-block fuzz tier
+                 (hypothesis, with an always-on deterministic twin).
+  * bitwise    — the fused decode reference consuming int8 pools +
+                 per-(head, page) scales equals the same reference fed
+                 the dequantized pools; the CPU quant_matmul dispatch
+                 equals the dequantized-oracle matmul.
+  * loose      — end-to-end decode logits with an int8 KV cache track
+                 the fp cache within a small deviation on ALL archs.
+  * serve      — a BatchedServer stream with QuantConfig(kv="int8")
+                 drains, closes the page ledger, and carries the KV
+                 pool at ~4x fewer bytes than fp32.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.kernels import ops, ref
+from repro.kernels.quant import (QTensor, WEIGHT_FORMATS, dequantize_tensor,
+                                 quantize_tensor)
+from repro.models.quantize import quantize_params
+from repro.models.registry import get_model
+from repro.models import transformer as T
+
+B, S = 2, 32
+
+
+def _is_qtensor(x):
+    return isinstance(x, QTensor)
+
+
+def _assert_within_bound(w, qt):
+    """Element-wise |dequant - w| <= the format's half-step bound."""
+    deq = dequantize_tensor(qt)
+    err = jnp.abs(deq - w.astype(jnp.float32))
+    nb, block = qt.scales.shape[-2], ref.QUANT_BLOCK
+    d, n = w.shape[-2], w.shape[-1]
+    pad = nb * block - d
+    if pad:
+        err = jnp.concatenate(
+            [err, jnp.zeros(w.shape[:-2] + (pad, n), jnp.float32)], axis=-2)
+    blocked = err.reshape(w.shape[:-2] + (nb, block, n))
+    bound = ref.quant_error_bound(qt.fmt, qt.scales)[..., None, :]
+    assert bool(jnp.all(blocked <= bound + 1e-6)), \
+        (qt.fmt, w.shape, float(jnp.max(blocked - bound)))
+
+
+# ------------------------------------------------------------- bound tier
+
+@pytest.mark.parametrize("fmt", WEIGHT_FORMATS)
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_weight_roundtrip_bound_all_archs(arch_id, fmt):
+    """quantize_params rewrites every eligible projection of every arch
+    into a QTensor whose dequantization stays inside the per-block error
+    bound — and leaves everything else (embeddings, norms, routers, MoE
+    expert stacks, convs) untouched."""
+    cfg = get_smoke_config(arch_id)
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.key(0))
+    qp = quantize_params(params, fmt)
+    flat_fp = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_q = dict(jax.tree_util.tree_flatten_with_path(
+        qp, is_leaf=_is_qtensor)[0])
+    n_quantized = 0
+    for path, w in flat_fp:
+        q = flat_q[path]
+        if isinstance(q, QTensor):
+            n_quantized += 1
+            assert q.shape == w.shape, (path, q.shape, w.shape)
+            _assert_within_bound(w, q)
+            assert q.nbytes < w.astype(jnp.float32).nbytes / 2, path
+        else:
+            assert q is w, path
+    assert n_quantized > 0, arch_id
+
+
+def _roundtrip_case(fmt, d, n, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(d, n)) * rng.uniform(0.01, 4.0),
+                    jnp.float32)
+    qt = quantize_tensor(w, fmt)
+    assert qt.shape == (d, n)
+    _assert_within_bound(w, qt)
+    # padding lanes must not widen a ragged final block's q4_k range:
+    # the bound above is computed from valid-lane scales, so a blowup
+    # would already have tripped it; also pin the blocked layout.
+    assert qt.scales.shape == (-(-d // ref.QUANT_BLOCK), n)
+
+
+@pytest.mark.parametrize("fmt", WEIGHT_FORMATS)
+def test_roundtrip_ragged_blocks_deterministic(fmt):
+    """Always-on twin of the hypothesis tier: widths straddling every
+    block-boundary regime (1, block-1, block, block+1, ...)."""
+    blk = ref.QUANT_BLOCK
+    for i, d in enumerate((1, 2, blk - 1, blk, blk + 1, 2 * blk - 1,
+                           2 * blk, 3 * blk + 7, 97)):
+        _roundtrip_case(fmt, d, 5, seed=i)
+
+
+def test_roundtrip_ragged_blocks_hypothesis():
+    """Random (d, n, fmt, seed) round trips stay inside the bound.
+    (Needs hypothesis; the deterministic twin above always runs.)"""
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(d=st.integers(1, 3 * ref.QUANT_BLOCK + 5),
+           n=st.integers(1, 9),
+           fmt=st.sampled_from(WEIGHT_FORMATS),
+           seed=st.integers(0, 2 ** 16))
+    def run(d, n, fmt, seed):
+        _roundtrip_case(fmt, d, n, seed)
+
+    run()
+
+
+# ----------------------------------------------------------- bitwise tier
+
+@pytest.mark.parametrize("fmt", WEIGHT_FORMATS)
+def test_quant_matmul_matches_dequant_oracle(fmt):
+    """ops.quant_matmul == x @ dequantize(qt) on both the jitted CPU
+    dispatch path and the Pallas interpret path, to f32 accumulation
+    order (ragged d/n exercise both pad seams)."""
+    rng = np.random.default_rng(3)
+    d, n, m = 3 * ref.QUANT_BLOCK + 7, 37, 5
+    w = jnp.asarray(rng.normal(size=(d, n)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    qt = quantize_tensor(w, fmt)
+    oracle = np.asarray(x @ dequantize_tensor(qt))
+    np.testing.assert_allclose(np.asarray(ops.quant_matmul(x, qt)),
+                               oracle, rtol=1e-4, atol=1e-4)
+    got = ops.quant_matmul(x, qt, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), oracle,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kv_pages_roundtrip_bound_and_fused_reference_bitwise():
+    """quantize_kv_pages round-trips inside scale/2 per element, and the
+    fused decode reference fed (int8 pools, scales) is BITWISE equal to
+    the same reference fed the dequantized pools — paged or dense."""
+    rng = np.random.default_rng(11)
+    b, kh, h, s, hd, ps = 2, 2, 4, 32, 8, 8
+    kv = jnp.asarray(rng.normal(size=(b, kh, s, hd)) * 3.0, jnp.float32)
+    q8, scales = ref.quantize_kv_pages(kv, ps)
+    deq = ref.dequantize_kv_pages(q8, scales)
+    err = jnp.abs(deq - kv).reshape(b, kh, s // ps, ps, hd)
+    bound = (scales * 0.5)[..., None, None]
+    assert bool(jnp.all(err <= bound + 1e-6))
+
+    k8, ks = ref.quantize_kv_pages(kv, ps)
+    v2 = jnp.asarray(rng.normal(size=(b, kh, s, hd)), jnp.float32)
+    v8, vs = ref.quantize_kv_pages(v2, ps)
+    q = jnp.asarray(rng.normal(size=(b, 1, h, hd)), jnp.float32)
+    pos = jnp.array([13, 29], jnp.int32)
+    pages = jnp.asarray(rng.permutation(s // ps)[None].repeat(b, 0))
+    for pg, psz in ((None, 0), (pages, ps)):
+        fused = ref.decode_fused_reference(
+            q, k8, v8, pos, pages=pg, page_size=psz, kv_scales=(ks, vs))
+        manual = ref.decode_fused_reference(
+            q, ref.dequantize_kv_pages(k8, ks),
+            ref.dequantize_kv_pages(v8, vs), pos, pages=pg, page_size=psz)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(manual))
+
+
+# ------------------------------------------------------------- loose tier
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_int8_kv_decode_parity_all_archs(arch_id):
+    """Per-token decode with an int8 KV cache tracks the fp cache on
+    every arch: finite logits, small deviation, and the greedy token
+    stream agrees step for step at smoke scale."""
+    cfg = get_smoke_config(arch_id)
+    model = get_model(cfg)
+    params = model.init_params(cfg, jax.random.key(0))
+    cfp = model.init_cache(cfg, B, S, page_size=8)
+    cq = model.init_cache(cfg, B, S, page_size=8, kv_quant="int8")
+    step = jax.jit(functools.partial(model.decode_step, cfg))
+    rng = np.random.default_rng(ARCH_IDS.index(arch_id))
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, size=(B, 10)), jnp.int32)
+    worst, flips = 0.0, 0
+    for t in range(toks.shape[1]):
+        lf, cfp = step(params, cfp, toks[:, t:t + 1])
+        lq, cq = step(params, cq, toks[:, t:t + 1])
+        assert bool(jnp.all(jnp.isfinite(lq)))
+        worst = max(worst, float(jnp.max(jnp.abs(lf - lq))))
+        af = np.asarray(lf.argmax(-1)).ravel()
+        aq = np.asarray(lq.argmax(-1)).ravel()
+        lfn = np.asarray(lf.astype(jnp.float32)).reshape(B, -1)
+        for b in range(B):
+            if af[b] != aq[b]:
+                flips += 1
+                # a flip is only acceptable at a genuine near-tie in
+                # the fp logits (MoE router flips land here)
+                gap = float(lfn[b, af[b]] - lfn[b, aq[b]])
+                assert 0.0 <= gap < 0.1, (arch_id, t, b, gap)
+    assert flips <= 2, (arch_id, flips)
+    # MoE archs pay for near-tie router flips (an expert swap moves the
+    # whole logit row); the near-tie gate above is the strict assertion,
+    # the dev bound just catches gross corruption.
+    assert worst < 2.5, (arch_id, worst)
+    # quantized pools really are int8 (not a silent fp fallthrough)
+    kv_leaves = [k for k in cq if T._is_self_kv(k)]
+    if kv_leaves:
+        assert all(cq[k].dtype == jnp.int8 for k in kv_leaves)
+        assert any(T._is_kv_scale(k) for k in cq), sorted(cq)
+
+
+# ------------------------------------------------------------- serve tier
+
+def test_serve_quant_stream_drains_and_halves_kv_bytes():
+    """QuantConfig(kv="int8") end to end: the stream drains, the page
+    ledger closes, and the self-attention KV pool (quants + scales)
+    carries < 1/1.9 of the fp pool's bytes (ISSUE acceptance)."""
+    from repro.launch import steps as steps_lib
+    from repro.launch.serve import BatchedServer, Request
+
+    def kv_bytes(cache):
+        return sum(int(v.nbytes) for k, v in cache.items()
+                   if T._is_self_kv(k) or T._is_kv_scale(k))
+
+    streams = {}
+    for quant in (None, steps_lib.QuantConfig(kv="int8")):
+        srv = BatchedServer("starcoder2_3b", smoke=True, batch_slots=2,
+                            max_seq=64, stream=True, quant=quant)
+        rng = np.random.default_rng(7)
+        for i in range(5):
+            plen = int(rng.integers(4, 12))
+            prompt = rng.integers(1, srv.cfg.vocab, plen).astype(np.int32)
+            srv.submit(Request(i, prompt, 8))
+        srv.run_until_drained()
+        srv.assert_ledger()
+        assert srv.pages_allocated == srv.pages_freed
+        assert all(len(r.generated) == 8 for r in srv.completed)
+        streams[quant is None] = (kv_bytes(srv.cache),
+                                  [r.generated for r in
+                                   sorted(srv.completed,
+                                          key=lambda r: r.rid)])
+    fp_bytes, fp_toks = streams[True]
+    q_bytes, q_toks = streams[False]
+    assert fp_bytes / q_bytes >= 1.9, (fp_bytes, q_bytes)
+    agree = sum(a == b for a, b in zip(fp_toks, q_toks))
+    assert agree >= len(fp_toks) - 1, (agree, len(fp_toks))
+
+
+def test_serve_quant_weights_stream_drains():
+    """Weight quantization (q8_0 and q4_k) composes with the int8 KV
+    cache in the serving loop."""
+    from repro.launch import steps as steps_lib
+    from repro.launch.serve import BatchedServer, Request
+
+    for fmt in WEIGHT_FORMATS:
+        srv = BatchedServer("starcoder2_3b", smoke=True, batch_slots=2,
+                            max_seq=64, stream=True,
+                            quant=steps_lib.QuantConfig(weights=fmt,
+                                                        kv="int8"))
+        rng = np.random.default_rng(9)
+        for i in range(4):
+            prompt = rng.integers(1, srv.cfg.vocab, 6).astype(np.int32)
+            srv.submit(Request(i, prompt, 6))
+        srv.run_until_drained()
+        srv.assert_ledger()
+        assert srv.pages_allocated == srv.pages_freed
+        assert all(len(r.generated) == 6 for r in srv.completed), fmt

@@ -194,6 +194,53 @@ def test_mixed_greedy_and_sampled_rows():
     assert toks[3] in set(np.argsort(-np.asarray(lf)[3])[:4])
 
 
+def test_capped_epilogue_bitwise_matches_full_argsort_reference():
+    """Regression (ISSUE 9 satellite 3): the partial-sort sampling
+    epilogue (`ref.sample_tokens_capped`, SAMPLE_HEAD-rank `lax.top_k`
+    with an in-graph full-reference fallback) emits BITWISE the tokens
+    of the full-vocab argsort reference for fixed seeds — across greedy,
+    top-k, nucleus, min-p, pad-bounded and deliberately-unclosed rows
+    (the last forcing the `lax.cond` fallback branch)."""
+    from repro.kernels import ref
+    v_big = 8 * ref.SAMPLE_HEAD          # partial-sort path live
+    configs = [
+        dict(),                                      # greedy
+        dict(temperature=0.8, top_k=8),              # top-k closes the head
+        dict(temperature=1.0, top_p=0.9),            # nucleus, head-closed
+        dict(temperature=1.2, min_p=0.05),           # min-p floor
+        dict(temperature=8.0, top_p=0.9999),         # near-flat: head mass
+                                                     # can't close → fallback
+    ]
+    for seed in range(12):
+        lf = logits_for(seed, v=v_big)
+        for kw in configs:
+            p = params(**kw)
+            keys = keys_for(seed)
+            got = np.asarray(ops.sample_tokens(lf, p, keys,
+                                               vocab=v_big - 13))
+            want = np.asarray(ref.sample_tokens_reference(
+                lf, p.temperature, p.top_k, p.top_p, p.min_p, keys,
+                vocab=v_big - 13))
+            np.testing.assert_array_equal(got, want, err_msg=str(kw))
+
+
+def test_capped_fallback_branch_engages_and_matches():
+    """The closure test is honest: a row whose head mass cannot reach
+    top_p routes the WHOLE batch through the full reference in-graph,
+    and the result is still bitwise the reference's."""
+    from repro.kernels import ref
+    v_big = 4 * ref.SAMPLE_HEAD
+    lf = jnp.zeros((B, v_big), jnp.float32)          # uniform: head mass
+    p = params(temperature=1.0, top_p=0.9)           # = head/V << top_p
+    keys = keys_for(99)
+    head_mass = ref.SAMPLE_HEAD / v_big
+    assert head_mass < 0.9                           # fallback by design
+    got = np.asarray(ops.sample_tokens(lf, p, keys))
+    want = np.asarray(ref.sample_tokens_reference(
+        lf, p.temperature, p.top_k, p.top_p, p.min_p, keys))
+    np.testing.assert_array_equal(got, want)
+
+
 # ------------------------------------------- hypothesis fuzz (optional)
 
 if HAVE_HYPOTHESIS:

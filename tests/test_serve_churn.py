@@ -267,6 +267,83 @@ def test_churn_3x_oversubscribed_offload(arch):
         assert off_server.prefix_hits_partial > 0
 
 
+# -- page-ledger clock tracking (DESIGN.md §9.3) ---------------------------
+
+@pytest.mark.parametrize("arch", ["starcoder2_3b", "mamba2_370m"])
+def test_ledger_tracks_position_clock_not_admission_span(arch):
+    """Regression (PR 9 bugfix): the page ledger used to charge a
+    request's whole prompt+budget span at admission, so pages_resident
+    overstated true occupancy for any row that retired early.  Pages are
+    now charged as the position clock advances (worst-case at dispatch,
+    trimmed back at consume) and reclaimed at retirement, with
+    allocated == freed + resident asserted every step.  A row stopped
+    after its first segment must therefore peak at its true footprint,
+    not its admitted span."""
+    from repro.launch.serve import BatchedServer, Request, SamplingParams
+    ps = 4
+
+    class LedgerChecked(BatchedServer):
+        """Closure + occupancy invariants after every consume: the
+        resident count is exactly the sum of per-slot charges, no slot
+        ever holds more than the max-seq span, and an idle slot holds
+        nothing."""
+        def _consume_segment(self, *a, **kw):
+            super()._consume_segment(*a, **kw)
+            self.assert_ledger()
+            assert self.pages_resident == sum(self.slot_pages)
+            cap = self._pages_for(self.max_seq)
+            for s in range(self.batch):
+                assert 0 <= self.slot_pages[s] <= cap, (s, self.slot_pages)
+                if self.active[s] is None and s not in self.prefilling:
+                    assert self.slot_pages[s] == 0, (s, self.slot_pages)
+
+    def serve(reqs, **kw):
+        server = LedgerChecked(arch, smoke=True, batch_slots=2,
+                               max_seq=MAX_SEQ, protocol="bs", stream=True,
+                               seg_len=SEG_LEN, page_size=ps, **kw)
+        for r in reqs:
+            server.submit(r)
+        server.run_until_drained(max_steps=100_000)
+        assert server.pages_allocated == server.pages_freed
+        assert server.pages_resident == 0
+        return server
+
+    cfg = get_smoke_config(arch)
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(1, cfg.vocab, 3).astype(np.int32)
+
+    # 1. greedy probe: learn the row's first generated token.  A cache
+    # without a page table (pure SSM) ignores the requested page size and
+    # accounts in default_page_size granules — read the effective size.
+    probe = serve([Request(0, prompt, 24)])
+    first_tok = probe.completed[0].generated[0]
+    eff = probe.page_size
+    span_pages = -(-(len(prompt) + 24) // eff)         # old admission charge
+    # the full run walks its clock through (almost) the whole span; the
+    # streamed loop runs one dispatch ahead of consume, so the final
+    # budget segment is charged at the stale (one-segment-old) clock
+    assert probe.pages_resident_peak >= -(-(len(prompt) + 24 - SEG_LEN)
+                                          // eff)
+
+    # 2. same row with that token as its stop: retires inside the first
+    # segment, so the clock-tracked peak is one segment past the prompt —
+    # NOT the 24-token admitted span the old ledger charged up front
+    stopped = serve([Request(0, prompt, 24,
+                             sampling=SamplingParams(
+                                 stop_tokens=(first_tok,)))])
+    assert tuple(stopped.completed[0].generated) == (first_tok,)
+    true_peak = -(-(len(prompt) + SEG_LEN) // eff)
+    assert stopped.pages_resident_peak <= true_peak, \
+        (stopped.pages_resident_peak, true_peak)
+    if span_pages > true_peak:        # fine-grained pages: the peak gap
+        assert stopped.pages_resident_peak < span_pages    # IS the bugfix
+
+    # 3. the full churn workload under the per-consume invariant checks
+    workload = _make_workload(cfg, rng)[:12]
+    churn = serve([Request(**w) for w in workload])
+    assert len(churn.completed) == len(workload)
+
+
 # -- chunked admission prefill (DESIGN.md §9) ------------------------------
 
 def _syncs_at_completion(server_cls):

@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Bench-regression guard: diff a freshly generated BENCH_decode.json
+against the committed baseline and fail on semantic regressions while
+only WARNING on wall-clock noise (CI runs this after regenerating the
+JSON; CPU runners' us_per_call jitter is not a signal, the scheduler
+invariants are).
+
+FAIL (exit 1) when, for any row present in the baseline:
+  * the row is missing from the fresh run (a bench stopped reporting);
+  * `syncs_per_token` increased (the decode fast path grew a host sync);
+  * any parity/invariant field that was 1 in the baseline reads 0
+    (identical_tokens, *_bitwise_*, syncs_match_*, restore_overlapped,
+    ... — every `=1` flag a row asserts-and-reports);
+  * `kv_bytes_reduction` fell below the 1.9x acceptance bar while the
+    baseline met it (quantized pages silently grew).
+
+WARN (exit 0) when `us_per_call` grew by more than WARN_RATIO — printed
+for the log, never fatal.
+
+Usage:
+    python tools/check_bench_regression.py \
+        [--baseline PATH|HEAD] [--fresh PATH]
+
+`--baseline HEAD` (the default) reads the committed file via
+`git show HEAD:BENCH_decode.json`, so the guard needs no extra artifact
+plumbing in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH = "BENCH_decode.json"
+WARN_RATIO = 1.5
+KV_REDUCTION_BAR = 1.9
+# a parity field is any derived key a row reports as an asserted 0/1
+# invariant; matching on name shape keeps the guard open to new rows
+PARITY_MARKERS = ("identical_tokens", "_bitwise_", "bitwise_",
+                  "syncs_match_", "restore_overlapped",
+                  "inflight_syncs_match", "paged")
+
+
+def _load_baseline(spec: str) -> list:
+    if spec == "HEAD":
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{BENCH}"], cwd=ROOT,
+            capture_output=True, text=True)
+        if out.returncode != 0:
+            print(f"no committed {BENCH} at HEAD — nothing to guard")
+            sys.exit(0)
+        return json.loads(out.stdout)
+    return json.loads(pathlib.Path(spec).read_text())
+
+
+def _is_parity(key: str) -> bool:
+    return any(m in key for m in PARITY_MARKERS)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="HEAD")
+    ap.add_argument("--fresh", default=str(ROOT / BENCH))
+    args = ap.parse_args()
+
+    base = {r["name"]: r for r in _load_baseline(args.baseline)}
+    fresh = {r["name"]: r
+             for r in json.loads(pathlib.Path(args.fresh).read_text())}
+
+    failures, warnings = [], []
+    for name, brow in sorted(base.items()):
+        frow = fresh.get(name)
+        if frow is None:
+            failures.append(f"{name}: row missing from fresh run")
+            continue
+        bd, fd = brow.get("derived", {}), frow.get("derived", {})
+
+        bs, fs = bd.get("syncs_per_token"), fd.get("syncs_per_token")
+        if isinstance(bs, (int, float)) and isinstance(fs, (int, float)) \
+                and fs > bs + 1e-9:
+            failures.append(
+                f"{name}: syncs_per_token regressed {bs} -> {fs}")
+
+        for key, bval in bd.items():
+            if _is_parity(key) and bval == 1 and fd.get(key) == 0:
+                failures.append(f"{name}: parity field {key} flipped 1 -> 0")
+
+        br, fr = bd.get("kv_bytes_reduction"), fd.get("kv_bytes_reduction")
+        if isinstance(br, (int, float)) and isinstance(fr, (int, float)) \
+                and br >= KV_REDUCTION_BAR > fr:
+            failures.append(
+                f"{name}: kv_bytes_reduction fell below the "
+                f"{KV_REDUCTION_BAR}x bar ({br} -> {fr})")
+
+        bu, fu = brow.get("us_per_call"), frow.get("us_per_call")
+        if isinstance(bu, (int, float)) and isinstance(fu, (int, float)) \
+                and bu > 0 and fu > bu * WARN_RATIO:
+            warnings.append(
+                f"{name}: us_per_call {bu:.1f} -> {fu:.1f} "
+                f"(>{WARN_RATIO}x; timing is WARN-only on CI hardware)")
+
+    for w in warnings:
+        print(f"WARN  {w}")
+    for f in failures:
+        print(f"FAIL  {f}")
+    if not failures:
+        print(f"bench regression guard: {len(base)} baseline rows ok "
+              f"({len(warnings)} timing warnings)")
+        return 0
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
