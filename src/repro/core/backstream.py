@@ -364,8 +364,34 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
         n_chunks = max(n_shards, 1) * max(1, cfg.chunks_per_shard)
         n_chunks = min(n_chunks, s)
 
+    if (rules is not None and rules.head_shard_attn and n_shards > 1):
+        # Serving tensor parallelism (DESIGN.md §11): heads — not the
+        # sequence — are the unit of sharding, because the per-head
+        # statistics recompose EXACTLY (all_gather is a bit-copy) while
+        # any sequence split re-associates the softmax reduction.  Each
+        # shard runs the fused partial over its own head group's full
+        # panel; merging degenerates to concatenation.
+        h = q.shape[2]
+        shard_kv = kh % n_shards == 0
+        # a contiguous q-head split aligns with GQA groups only when the
+        # KV heads split too (n | KH) or every head shares the single KV
+        # head (KH == 1); otherwise fall through to the replicated fused
+        # path — invariance still holds, parallelism just doesn't apply
+        if shard_kv or (kh == 1 and h % n_shards == 0):
+            b_axes = rules.batch_axes
+            b_size = 1
+            for a in b_axes:
+                b_size *= mesh.shape[a]
+            if b_size == 0 or b % b_size:
+                b_axes = None
+            return _headgroup_gather_decode(
+                q, k_cache, v_cache, pos_b, window, extra, pages,
+                kv_scales, page_size, mesh, axis, b_axes, shard_kv)
+
     if (cfg.protocol == OffloadProtocol.AXLE and mesh is not None
-            and axis is not None and s % n_shards == 0 and n_shards > 1):
+            and axis is not None
+            and not (rules is not None and rules.head_shard_attn)
+            and s % n_shards == 0 and n_shards > 1):
         # shard_map needs exact divisibility; drop the batch sharding for
         # tiny batches (e.g. the batch-1 long_500k cells).
         b_axes = rules.batch_axes
@@ -385,7 +411,8 @@ def decode_attention_combined(q: jax.Array, k_cache: jax.Array,
                                  b_axes, extra)
 
     if (cfg.fused and cfg.protocol != OffloadProtocol.RP
-            and (mesh is None or n_shards <= 1)):
+            and (mesh is None or n_shards <= 1
+                 or (rules is not None and rules.head_shard_attn))):
         # BS / single-shard fast path: one fused launch, chunk size chosen
         # so the fused kernel's internal grid matches the configured
         # chunking (the VMEM-resident accumulation makes the count
@@ -492,6 +519,93 @@ def _axle_ring_decode(q, k_cache, v_cache, kv_valid, mesh, axis, batch_axes,
         out_specs=P(batch_axes, None, None, None),
         check_rep=False,
     )(q, k_cache, v_cache, kv_valid, *extra_args)
+
+
+def _headgroup_gather_decode(q, k_cache, v_cache, pos_b, window, extra,
+                             pages, kv_scales, page_size, mesh, axis,
+                             batch_axes, shard_kv):
+    """Head-group-sharded fused decode: the AXLE ring's partial-merge
+    protocol at mesh scale, specialized to the one sharding for which the
+    merge is EXACT (DESIGN.md §11).
+
+    Each model shard owns a contiguous head group and runs ONE fused
+    partial (`ops.decode_attention_fused_partial`) over that group's full
+    cache panel — pages, int8 dequant, sliding window and the current
+    token's `extra` partial all merge shard-locally, per head.  The
+    (acc, m, l) statistics then cross shards via a tiled `all_gather`
+    over the head axis: because no two shards computed statistics for the
+    same head, the fused-partial merge epilogue degenerates to
+    concatenation — pure data movement, no float reduction — and the one
+    global `normalize_fused_partial` recovers the single-device fused
+    output bit-for-bit.  Wire bytes per shard per merge:
+    (n-1) * B_local * H_local * (hd + 2) * 4 — the same (acc, m, l)
+    payload the ring's `tpu_backstream.AXLE` accounting charges, tracked
+    host-side by `core.ring.WireLedger`.
+
+    `shard_kv`: the n | KH regime — the KV panel (and its page scales)
+    shard over the KV-head axis too; otherwise (KH == 1, n | H) the panel
+    is replicated and only q's head axis splits."""
+    from repro.kernels import ops
+    from repro.kernels import ref as _ref
+    kv_ax = axis if shard_kv else None
+    blk_c = page_size if pages is not None else (
+        k_cache.shape[2] // kv_scales[0].shape[2]
+        if kv_scales is not None else 128)
+    has_extra = extra is not None
+    has_pages = pages is not None
+    has_scales = kv_scales is not None
+    operands = (q, k_cache, v_cache, pos_b)
+    in_specs = (P(batch_axes, None, axis, None),    # q: shard heads
+                P(batch_axes, kv_ax, None, None),   # (B,KH,S,hd)
+                P(batch_axes, kv_ax, None, None),
+                P(batch_axes,))
+    if has_pages:
+        operands += (pages,)
+        in_specs += (P(batch_axes, None),)
+    if has_scales:
+        operands += tuple(kv_scales)                # (B,KH,n_pages) each
+        in_specs += (P(batch_axes, kv_ax, None),) * 2
+    if has_extra:
+        operands += tuple(extra)                    # (B,H,hd),(B,H),(B,H)
+        in_specs += (P(batch_axes, axis, None), P(batch_axes, axis),
+                     P(batch_axes, axis))
+
+    # Pin every operand to its model-REPLICATED graph-side layout right
+    # at the shard_map boundary.  Without this, the head/KH slicing in
+    # `in_specs` back-propagates through the enclosing jit: the donated
+    # cache would come OUT of a decode segment committed KH-sharded, the
+    # next prefill would recompile against that layout and its
+    # column-partitioned x@wk gemm drifts bf16 low bits (DESIGN.md §11).
+    # The head split therefore lives only in the boundary reshard below —
+    # slicing a replicated array, a bit-copy.
+    from jax.sharding import NamedSharding
+    operands = tuple(
+        lax.with_sharding_constraint(
+            o, NamedSharding(mesh, P(*(None if s == axis else s
+                                       for s in spec))))
+        for o, spec in zip(operands, in_specs))
+
+    def local(q_l, k_l, v_l, pos_l, *rest):
+        rest = list(rest)
+        pages_l = rest.pop(0) if has_pages else None
+        scales_l = (rest.pop(0), rest.pop(0)) if has_scales else None
+        extra_l = tuple(rest) if has_extra else None
+        acc, m, l = ops.decode_attention_fused_partial(
+            q_l, k_l, v_l, pos_l, extra_l, pages_l, scales_l,
+            window=window, blk_c=blk_c)
+        # the wire crossing: (acc, m, l) statistics concatenate over the
+        # head axis in ring order — a bit-copy, never a reduction
+        acc = lax.all_gather(acc, axis, axis=1, tiled=True)
+        m = lax.all_gather(m, axis, axis=1, tiled=True)
+        l = lax.all_gather(l, axis, axis=1, tiled=True)
+        del m  # fully merged already — normalization only needs (acc, l)
+        return _ref.normalize_fused_partial(acc, l, q_l.dtype)
+
+    return shard_map(
+        local, mesh=mesh, in_specs=in_specs,
+        out_specs=P(batch_axes, None, None, None),
+        check_rep=False,
+    )(*operands)
 
 
 # --------------------------------------------------------------------------

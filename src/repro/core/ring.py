@@ -93,3 +93,68 @@ def invariants_ok(ring: RingState) -> jax.Array:
         & (ring.head <= ring.tail)
         & (ring.tail - ring.head <= cap)
     )
+
+
+# --------------------------------------------------------------------------
+# AXLE wire accounting: bytes the ring moves between shards per merge
+# --------------------------------------------------------------------------
+
+def merge_wire_bytes_per_shard(n_shards: int, rows: int, heads_local: int,
+                               head_dim: int, itemsize: int = 4) -> int:
+    """Bytes ONE shard puts on the AXLE wire for ONE partial-attention
+    merge: its (acc, m, l) statistics — rows * heads_local * (head_dim
+    + 2) elements — sent to each of the n-1 peers (ring hops and a tiled
+    all_gather move the same payload, just on different schedules; this
+    is the figure `benchmarks/tpu_backstream.py` charges the AXLE row).
+    Zero for a single shard: nothing crosses the wire (DESIGN.md §11)."""
+    if n_shards <= 1:
+        return 0
+    return (n_shards - 1) * rows * heads_local * (head_dim + 2) * itemsize
+
+
+@dataclasses.dataclass
+class WireLedger:
+    """Host-side per-segment AXLE DMA accounting for the mesh-sharded
+    serve loop (DESIGN.md §11).
+
+    The jitted decode segment is deterministic in its merge structure —
+    every decode step runs one head-group partial merge per attention
+    block (and the verify forward one per draft position) — so the host
+    can charge the wire EXACTLY without reading anything back from the
+    device: `charge_merges(n)` after dispatching a segment that performs
+    n merges.  `wire_bytes_per_shard` is then the bytes one shard sent;
+    `wire_bytes_total` the whole mesh's traffic.  Shard-count invariance
+    of everything ELSE (tokens, syncs) is the tested property; the wire
+    bytes are the one quantity that legitimately scales with the mesh."""
+    n_shards: int
+    rows_local: int
+    heads_local: int
+    head_dim: int
+    itemsize: int = 4
+    merges: int = 0
+    segments: int = 0
+
+    @property
+    def bytes_per_merge(self) -> int:
+        return merge_wire_bytes_per_shard(
+            self.n_shards, self.rows_local, self.heads_local,
+            self.head_dim, self.itemsize)
+
+    @property
+    def wire_bytes_per_shard(self) -> int:
+        return self.merges * self.bytes_per_merge
+
+    @property
+    def wire_bytes_total(self) -> int:
+        return self.wire_bytes_per_shard * self.n_shards
+
+    def charge_merges(self, n_merges: int) -> None:
+        assert n_merges >= 0
+        self.merges += int(n_merges)
+        self.segments += 1
+
+    def per_segment(self) -> float:
+        """Mean wire bytes per dispatched segment (0.0 before any)."""
+        if not self.segments:
+            return 0.0
+        return self.wire_bytes_per_shard / self.segments

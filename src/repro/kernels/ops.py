@@ -82,6 +82,59 @@ def decode_attention_fused(q, k, v, pos, extra=None, pages=None,
                                        kv_scales=kv_scales)
 
 
+@functools.partial(jax.jit, static_argnames=("window", "blk_c", "interpret"))
+def decode_attention_fused_partial(q, k, v, pos, extra=None, pages=None,
+                                   kv_scales=None, *,
+                                   window: int = 0, blk_c: int = 128,
+                                   interpret: bool = False
+                                   ) -> Tuple[jax.Array, jax.Array,
+                                              jax.Array]:
+    """`decode_attention_fused` minus the final normalization: the
+    per-shard producer of the mesh-sharded decode (DESIGN.md §11).
+
+    Same argument surface as the fused entry; returns the raw merged
+    statistics (acc (B,H,hd) f32, m (B,H) f32, l (B,H) f32).  Each mesh
+    shard runs this over its OWN head group's cache panel, the partials
+    are concatenated over the head axis (`all_gather`, tiled — an exact
+    bit-copy, no float reduction), and one `ref.normalize_fused_partial`
+    epilogue recovers the single-device fused output bitwise, because
+    every statistic is per-(row, head) independent.
+
+    On TPU (or interpret=True) the producer is the Pallas
+    `decode_attention_partial` raw-partials kernel over the
+    dequantized/logically-gathered panel with the validity clock applied
+    host-side, merged with `extra` via the shared epilogue; on CPU it is
+    the fused oracle's own partial path, so the two dispatches share the
+    reference's math exactly."""
+    if _on_tpu() or interpret:
+        if kv_scales is not None:
+            k = _ref.dequantize_kv_pages(k, kv_scales[0])
+            v = _ref.dequantize_kv_pages(v, kv_scales[1])
+        if pages is not None:
+            k = _ref.gather_kv_pages(k, pages, blk_c)
+            v = _ref.gather_kv_pages(v, pages, blk_c)
+        b = q.shape[0]
+        s = k.shape[2]
+        pos_b = jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+        slots = jnp.arange(s)
+        valid = slots[None, :] <= pos_b[:, None]
+        if window > 0:
+            valid &= slots[None, :] > (pos_b - window)[:, None]
+        acc, m, l = _fa.decode_attention_partial(q, k, v, valid,
+                                                 blk_c=blk_c,
+                                                 interpret=interpret)
+        if extra is not None:
+            acc, m, l = _ref.merge_fused_partial_pair(acc, m, l, *extra)
+        return acc, m, l
+    page_size = blk_c if pages is not None else 0
+    if kv_scales is not None and pages is not None:
+        assert blk_c == k.shape[2] // kv_scales[0].shape[2]
+    return _ref.decode_fused_partial_reference(
+        q, k, v, pos, extra, window=window, pages=pages,
+        page_size=page_size, kv_scales=kv_scales)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def quant_matmul(x, qt: "_quant.QTensor", *,
                  interpret: bool = False) -> jax.Array:

@@ -95,6 +95,74 @@ def gather_kv_pages(kv: jax.Array, pages: jax.Array,
     return out.reshape(b, kh, n_log * page_size, hd)
 
 
+def merge_fused_partial_pair(acc: jax.Array, m: jax.Array, l: jax.Array,
+                             acc_e: jax.Array, m_e: jax.Array,
+                             l_e: jax.Array
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The fused kernel's two-way partial-softmax merge epilogue.
+
+    acc: (B,H,hd); m, l: (B,H) — merged with a second partial of the same
+    shapes.  Every per-head statistic combines independently of every
+    other head, which is what makes head-group sharding of the decode
+    bitwise-exact: a shard that never saw head h contributes exp(-inf)=0
+    there, so merging its partials degenerates to selecting the owning
+    shard's values verbatim (DESIGN.md §11)."""
+    mm = jnp.maximum(m, m_e)
+    mm_safe = jnp.where(jnp.isfinite(mm), mm, 0.0)
+    a1 = jnp.where(jnp.isfinite(m), jnp.exp(m - mm_safe), 0.0)
+    a2 = jnp.where(jnp.isfinite(m_e), jnp.exp(m_e - mm_safe), 0.0)
+    acc = acc * a1[..., None] + acc_e.astype(jnp.float32) * a2[..., None]
+    l = l * a1 + l_e * a2
+    return acc, jnp.where(jnp.isfinite(mm), mm, -jnp.inf), l
+
+
+def normalize_fused_partial(acc: jax.Array, l: jax.Array,
+                            dtype) -> jax.Array:
+    """Final softmax normalization of merged decode partials: acc
+    (B,H,hd), l (B,H) -> (B,1,H,hd) in `dtype`.  Split out of
+    `decode_fused_reference` so the mesh-sharded decode can run it once
+    AFTER all-gathering head-group partials (DESIGN.md §11)."""
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out[:, None].astype(dtype)
+
+
+def decode_fused_partial_reference(
+        q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
+        extra: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+        *, window: int = 0, pages: Optional[jax.Array] = None,
+        page_size: int = 0,
+        kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None
+        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """`decode_fused_reference` minus the final normalization: returns
+    the raw merged statistics (acc (B,H,hd), m (B,H), l (B,H)).
+
+    This is the per-shard producer of the mesh-sharded decode: each shard
+    computes the fused partial over ITS head group's full cache panel and
+    the partials are concatenated (all_gather over the head axis) before
+    one global `normalize_fused_partial` (DESIGN.md §11).  Accepts the
+    same dequant / paged-gather / sliding-window / extra-merge surface as
+    the fused oracle, and IS its implementation — so the single-device
+    output and any head-group-sharded recomposition agree bitwise."""
+    if kv_scales is not None:
+        k = dequantize_kv_pages(k, kv_scales[0])
+        v = dequantize_kv_pages(v, kv_scales[1])
+    if pages is not None:
+        assert page_size > 0, "page_size required with pages"
+        k = gather_kv_pages(k, pages, page_size)
+        v = gather_kv_pages(v, pages, page_size)
+    b = q.shape[0]
+    s = k.shape[2]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    slots = jnp.arange(s)
+    valid = slots[None, :] <= pos_b[:, None]
+    if window > 0:
+        valid &= slots[None, :] > (pos_b - window)[:, None]
+    acc, m, l = decode_partial_reference(q, k, v, valid)
+    if extra is not None:
+        acc, m, l = merge_fused_partial_pair(acc, m, l, *extra)
+    return acc, m, l
+
+
 def decode_fused_reference(q: jax.Array, k: jax.Array, v: jax.Array,
                            pos: jax.Array,
                            extra: Optional[Tuple[jax.Array, jax.Array,
@@ -118,31 +186,10 @@ def decode_fused_reference(q: jax.Array, k: jax.Array, v: jax.Array,
     (`dequantize_kv_pages`) before anything else, so the paged gather and
     the dense math see exactly the values the fused kernel reconstructs
     in VMEM (DESIGN.md §10).  Returns (B,1,H,hd) in q.dtype."""
-    if kv_scales is not None:
-        k = dequantize_kv_pages(k, kv_scales[0])
-        v = dequantize_kv_pages(v, kv_scales[1])
-    if pages is not None:
-        assert page_size > 0, "page_size required with pages"
-        k = gather_kv_pages(k, pages, page_size)
-        v = gather_kv_pages(v, pages, page_size)
-    b, _, h, hd = q.shape
-    s = k.shape[2]
-    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
-    slots = jnp.arange(s)
-    valid = slots[None, :] <= pos_b[:, None]
-    if window > 0:
-        valid &= slots[None, :] > (pos_b - window)[:, None]
-    acc, m, l = decode_partial_reference(q, k, v, valid)
-    if extra is not None:
-        acc_e, m_e, l_e = extra
-        mm = jnp.maximum(m, m_e)
-        mm_safe = jnp.where(jnp.isfinite(mm), mm, 0.0)
-        a1 = jnp.where(jnp.isfinite(m), jnp.exp(m - mm_safe), 0.0)
-        a2 = jnp.where(jnp.isfinite(m_e), jnp.exp(m_e - mm_safe), 0.0)
-        acc = acc * a1[..., None] + acc_e.astype(jnp.float32) * a2[..., None]
-        l = l * a1 + l_e * a2
-    out = acc / jnp.maximum(l, 1e-20)[..., None]
-    return out[:, None].astype(q.dtype)
+    acc, _, l = decode_fused_partial_reference(
+        q, k, v, pos, extra, window=window, pages=pages,
+        page_size=page_size, kv_scales=kv_scales)
+    return normalize_fused_partial(acc, l, q.dtype)
 
 
 # --------------------------------------------------------------------------

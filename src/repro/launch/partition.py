@@ -190,6 +190,26 @@ def cache_specs(abstract_cache: Dict[str, Any], cfg: ArchConfig,
             continue
         if k.startswith(("k", "v")) and not k.startswith("conv"):
             seq_ax = tp if (tp and _divisible(shape[3], mesh, tp)) else None
+            pt = abstract_cache.get("page_table")
+            if seq_ax and pt is not None:
+                # Pages are the indivisible unit of the paged cache: a
+                # (B, n_pages) table maps logical pages to physical pool
+                # pages, so a sequence (tp) split of the pool composes
+                # ONLY when every page lies wholly inside one shard.  A
+                # page straddling a shard boundary would silently read
+                # garbage through the kernel's page indirection — fail
+                # loudly instead (DESIGN.md §11).
+                n_model = mesh.shape[tp]
+                page_size = shape[3] // pt.shape[1]
+                if page_size == 0 or (shape[3] // n_model) % page_size:
+                    raise ValueError(
+                        f"cache leaf {k!r}: sequence-axis ({tp}) sharding "
+                        f"of the KV panel (S={shape[3]}) over "
+                        f"{n_model} shards would split a page "
+                        f"(page_size={page_size}) across shards; use a "
+                        f"page_size dividing S/{n_model}, fewer model "
+                        f"shards, or the head-sharded serving plan "
+                        f"(serve_cache_specs)")
             out[k] = P(None, batch_ax, None, seq_ax, None)
         elif k.startswith("cross_"):
             out[k] = P(None, batch_ax, None, None, None)
@@ -201,6 +221,89 @@ def cache_specs(abstract_cache: Dict[str, Any], cfg: ArchConfig,
             out[k] = P(None, batch_ax, nh_ax, None, None)
         else:
             out[k] = P(*([None] * len(shape)))
+    return out
+
+
+def serve_head_regime(cfg: ArchConfig, plan: PartitionPlan
+                      ) -> Tuple[bool, bool]:
+    """(shard_q, shard_kv) for the serving TP plan (DESIGN.md §11).
+
+    A contiguous split of the fused (H*hd) projection column aligns with
+    GQA head GROUPS only when the KV heads split with it (n | KH) or when
+    every head shares the one KV head (KH == 1, n | H); anything else
+    must stay replicated — serving favours a bitwise-identical replicated
+    fallback over a reshuffled head order."""
+    tp, mesh = plan.tp, plan.mesh
+    n = mesh.shape[tp] if tp else 1
+    h, kh = cfg.n_heads, cfg.n_kv_heads
+    if n <= 1 or h <= 0 or not cfg.has_attention:
+        # pure-SSM stacks have head counts but no attention merges —
+        # nothing for the head-group shard_map to do
+        return False, False
+    shard_kv = kh > 0 and kh % n == 0
+    shard_q = shard_kv or (kh == 1 and h % n == 0)
+    return shard_q, shard_kv
+
+
+def serve_param_specs(abstract_params: Any, cfg: ArchConfig,
+                      plan: PartitionPlan) -> Any:
+    """PartitionSpec pytree for SERVING under the bitwise-token contract
+    (DESIGN.md §11): every parameter is replicated on the model axis.
+
+    Column-sharding wq/wk/wv looks bitwise-safe on paper (each output
+    column is a full-contraction dot), but in practice the partitioned
+    gemm's different output width changes the backend's blocking and
+    perturbs low mantissa bits — measured ~3e-2 drift on bf16 smoke
+    configs.  So the jit-visible program stays fully replicated and the
+    model axis is engaged ONLY inside the decode head-group shard_map
+    (`backstream._headgroup_gather_decode`), whose in_specs slice whole
+    heads out of replicated operands — a pure bit-copy.  The KV cache
+    (see `serve_cache_specs`) may still shard its KV-head axis: scatter
+    writes into a head-sharded panel are also layout-only."""
+    del cfg, plan
+    return jax.tree_util.tree_map(
+        lambda leaf: P(), abstract_params)
+
+
+def serve_cache_specs(abstract_cache: Dict[str, Any], cfg: ArchConfig,
+                      plan: PartitionPlan) -> Dict[str, P]:
+    """Cache specs for SERVING under the bitwise-token contract
+    (DESIGN.md §11): batch shards over the data axes when it divides;
+    every other axis — KV heads included — stays model-REPLICATED.
+    Committing a KV-head sharding here looks free (the head axis is
+    batch-like in every attention contraction) but backward sharding
+    propagation column-partitions the prefill x@wk / x@wv gemms, which
+    changes the backend's blocking and drifts bf16 low bits (measured
+    ~3e-2 on smoke configs).  The sequence axis NEVER shards: its
+    partial-softmax merge re-associates the reduction and a seq split
+    can straddle a page (see the guard in `cache_specs`).  The decode
+    head-group shard_map slices KV heads out of the replicated panels
+    at its boundary — a bit-copy — so tensor parallelism still divides
+    attention compute n ways without touching the jit graph's bits."""
+    mesh, tp = plan.mesh, plan.tp
+    del tp
+    b_axes = plan.rules.batch_axes
+    kh_ax = None
+    out: Dict[str, P] = {}
+    for k, v in abstract_cache.items():
+        shape = v.shape
+        if k == "pos":
+            out[k] = P()
+        elif len(shape) == 1:
+            out[k] = P(b_axes if _divisible(shape[0], mesh, b_axes)
+                       else None)
+        elif k == "page_table":
+            out[k] = P(b_axes if _divisible(shape[0], mesh, b_axes)
+                       else None, None)
+        else:
+            batch_ax = b_axes if _divisible(shape[1], mesh, b_axes) \
+                else None
+            if k.startswith(("kscale", "vscale")):
+                out[k] = P(None, batch_ax, kh_ax, None)
+            elif k.startswith(("k", "v")) and not k.startswith("conv"):
+                out[k] = P(None, batch_ax, kh_ax, None, None)
+            else:
+                out[k] = P(None, batch_ax, *([None] * (len(shape) - 2)))
     return out
 
 

@@ -100,6 +100,7 @@ import numpy as np
 
 from repro import sharding as sh
 from repro.configs import get_config, get_smoke_config
+from repro.core import ring as ring_lib
 from repro.core.backstream import (HostTier, OffloadConfig, OffloadProtocol,
                                    PrefixCache, stream_offload_to_device,
                                    stream_offload_to_host, use_offload)
@@ -289,7 +290,11 @@ class BatchedServer:
         self.stream = stream
         self.offload = OffloadConfig(protocol=PROTOCOLS[protocol],
                                      chunks_per_shard=chunks_per_shard)
-        self.rules = sh.ShardingRules(mesh, seq_shard_attn=True) \
+        # Tensor-parallel serving (DESIGN.md §11): under a mesh the rules
+        # are the head-sharded layout whose every collective is a
+        # bit-copy, so streamed tokens are BITWISE the single-device
+        # server's for any mesh shape (tests/test_sharded_serve.py).
+        self.rules = sh.ShardingRules(mesh, head_shard_attn=True) \
             if mesh is not None else None
         self.params = self.model.init_params(self.cfg, jax.random.key(0))
         # serving-time quantization (DESIGN.md §10): block-quantized
@@ -309,6 +314,28 @@ class BatchedServer:
         self.cache = self.model.init_cache(self.cfg, batch_slots, max_seq,
                                            page_size=page_size,
                                            kv_quant=self.quant.kv)
+        # ---- mesh placement (DESIGN.md §11) --------------------------
+        # device_put COMMITS the serving shardings; every donated jit
+        # downstream propagates them, so no step function needs explicit
+        # in_shardings.  Params: REPLICATED on the model axis — a
+        # column-partitioned gemm changes the backend's blocking and
+        # perturbs bf16 low bits, so head slicing happens only inside
+        # the decode shard_map (serve_param_specs); cache: KV-head axis
+        # in the n | KH regime, batch over the data axes — both pure
+        # layout choices (serve_cache_specs).
+        self.plan = None
+        if mesh is not None:
+            from repro.launch import partition
+            self.plan = partition.PartitionPlan(rules=self.rules,
+                                                fsdp=False)
+            self.params = jax.device_put(
+                self.params, partition.to_shardings(
+                    partition.serve_param_specs(self.params, self.cfg,
+                                                self.plan), mesh))
+            self.cache = jax.device_put(
+                self.cache, partition.to_shardings(
+                    partition.serve_cache_specs(self.cache, self.cfg,
+                                                self.plan), mesh))
         # page ledger: one logical page = `page_size` sequence positions
         # of one slot row, charged AS THE POSITION CLOCK ADVANCES
         # (prompt pages at admission, decode pages at segment dispatch,
@@ -380,6 +407,20 @@ class BatchedServer:
             self.draft_model = get_model(self.draft_cfg)
             self.draft_cache = self.draft_model.init_cache(
                 self.draft_cfg, batch_slots, max_seq)
+            if self.plan is not None:
+                # the draft rides the same mesh under ITS OWN head
+                # regime (a truncated self-draft shares the target's)
+                from repro.launch import partition
+                self.draft_params = jax.device_put(
+                    self.draft_params, partition.to_shardings(
+                        partition.serve_param_specs(
+                            self.draft_params, self.draft_cfg,
+                            self.plan), mesh))
+                self.draft_cache = jax.device_put(
+                    self.draft_cache, partition.to_shardings(
+                        partition.serve_cache_specs(
+                            self.draft_cache, self.draft_cfg,
+                            self.plan), mesh))
             self.draft_prefill_fn = jax.jit(
                 steps_lib.make_prefill_into_cache(self.draft_cfg),
                 donate_argnums=(1,))
@@ -521,6 +562,43 @@ class BatchedServer:
         self.host_syncs = 0            # every host<->device sync (incl. prefill)
         self.decode_syncs = 0          # syncs attributable to the decode loop
         self.tokens_emitted = 0
+        # ---- AXLE wire accounting (DESIGN.md §11) --------------------
+        # Every decode step runs exactly one head-group partial merge
+        # per attention sublayer of the TARGET model (a verify forward:
+        # one per draft position per sublayer), so the host charges the
+        # ledger deterministically at dispatch — no device readback.
+        # Zero-wire cases (single shard, replicated fallback, pure-SSM)
+        # fall out of the formula: n_shards == 1 or heads_local * 0.
+        n_attn = self.cfg.attn_layers_per_block() * self.cfg.n_blocks
+        self._merges_per_step = n_attn
+        self._merges_per_spec_round = (spec_k + 1) * n_attn
+        if mesh is not None:
+            from repro.launch import partition
+            shard_q, _ = partition.serve_head_regime(self.cfg, self.plan)
+            n_eff = self.rules.model_size() if shard_q else 1
+            n_data = 1
+            for a in self.rules.batch_axes:
+                n_data *= mesh.shape[a]
+            rows_local = (batch_slots // n_data
+                          if n_data > 0 and batch_slots % n_data == 0
+                          else batch_slots)
+            self.wire = ring_lib.WireLedger(
+                n_shards=n_eff, rows_local=rows_local,
+                heads_local=self.cfg.n_heads // max(1, n_eff),
+                head_dim=self.cfg.head_dim_)
+        else:
+            self.wire = ring_lib.WireLedger(
+                n_shards=1, rows_local=batch_slots,
+                heads_local=self.cfg.n_heads,
+                head_dim=self.cfg.head_dim_)
+
+    @property
+    def wire_bytes_per_shard(self) -> int:
+        """Bytes ONE shard sent over the AXLE wire so far (DESIGN.md
+        §11) — the mesh-scale analogue of `tpu_backstream.AXLE`'s
+        per-merge accounting; 0 off-mesh and in every replicated
+        regime."""
+        return self.wire.wire_bytes_per_shard
 
     # -- admission ---------------------------------------------------------
 
@@ -1081,6 +1159,7 @@ class BatchedServer:
                         self.params, self.draft_params, self.cache,
                         self.draft_cache, self.state)
                 self.steps += self.spec_k + 1
+                self.wire.charge_merges(self._merges_per_spec_round)
                 self._consume_segment(seg, emit, self.state, rows,
                                       alens=alens)
                 self.assert_ledger()
@@ -1089,6 +1168,7 @@ class BatchedServer:
             seg, emit, self.state, self.cache = fn(
                 self.params, self.cache, self.state)
         self.steps += 1
+        self.wire.charge_merges(self._merges_per_step)
         self._consume_segment(seg, emit, self.state, rows)
         self.assert_ledger()
 
@@ -1122,6 +1202,8 @@ class BatchedServer:
                                 self.params, self.draft_params,
                                 self.cache, self.draft_cache, self.state)
                         self.steps += self.seg_len * (self.spec_k + 1)
+                        self.wire.charge_merges(
+                            self.seg_len * self._merges_per_spec_round)
                     else:
                         fn = (self.segment_plain_fn if plain
                               else self.segment_fn)
@@ -1129,6 +1211,8 @@ class BatchedServer:
                             self.params, self.cache, self.state)
                         alens = None
                         self.steps += self.seg_len
+                        self.wire.charge_merges(
+                            self.seg_len * self._merges_per_step)
                 self.segments_dispatched += 1
                 nxt_pending = (seg, emit, self.state, rows, alens)
             # the scheduler's interleave point (DESIGN.md §9): at most one
@@ -1284,10 +1368,29 @@ def main() -> int:
                     help="int8 KV cache with per-(layer,row,head,page) "
                          "scales applied inside the fused decode kernel "
                          "(DESIGN.md §10)")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="serve under a DATAxMODEL device mesh (e.g. "
+                         "1x2): tensor-parallel heads over 'model', "
+                         "batch over 'data' — tokens stay BITWISE the "
+                         "single-device stream (DESIGN.md §11).  On CPU "
+                         "set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N "
+                         "before launch")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_debug_mesh
+        n_data, n_model = (int(p) for p in args.mesh.lower().split("x"))
+        assert n_data * n_model <= jax.device_count(), \
+            (f"mesh {args.mesh} needs {n_data * n_model} devices, have "
+             f"{jax.device_count()} — set XLA_FLAGS="
+             f"--xla_force_host_platform_device_count={n_data * n_model}")
+        mesh = make_debug_mesh(n_data, n_model)
 
     rng = np.random.default_rng(0)
     server = BatchedServer(args.arch, smoke=True, batch_slots=args.slots,
+                           mesh=mesh,
                            protocol=args.protocol, stream=args.stream,
                            seg_len=args.seg_len, spec=args.spec,
                            spec_k=args.spec_k, draft_arch=args.draft,
@@ -1355,6 +1458,9 @@ def main() -> int:
         offl += (f" prefill_chunks={server.prefill_chunks}"
                  f" pages={server.pages_allocated}alloc/"
                  f"{server.pages_freed}freed")
+    if mesh is not None:
+        offl += (f" mesh={args.mesh}"
+                 f" wire_bytes_per_shard={server.wire_bytes_per_shard}")
     print(f"[serve] protocol={args.protocol} mode={mode} "
           f"sampling={'on' if sampled else 'greedy'} "
           f"requests={len(server.completed)} tokens={toks} "

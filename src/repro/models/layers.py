@@ -358,6 +358,20 @@ def moe_ffn_dist(x: jax.Array, router: jax.Array, w_gate: jax.Array,
     if rules is None or rules.model_axis is None:
         return moe_ffn(x, router, w_gate, w_up, w_down, top_k,
                        capacity_factor)
+    if rules.head_shard_attn:
+        # bitwise serving (DESIGN.md §11): the capacity cumsum and expert
+        # einsums couple ALL tokens, so a data-sharded batch lets GSPMD
+        # token-partition them — different gemm blocking, bf16 low-bit
+        # drift.  Replicate tokens through the expert compute (an
+        # all-gather in, a bit-copy) and hand the replicated result back;
+        # the next layer's "batch" constraint re-shards it.
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as _P
+        repl = NamedSharding(rules.mesh, _P(None, None))
+        x_r = lax.with_sharding_constraint(x, repl)
+        y = moe_ffn(x_r, router, w_gate, w_up, w_down, top_k,
+                    capacity_factor)
+        return lax.with_sharding_constraint(y, repl)
     mesh, maxis, baxes = rules.mesh, rules.model_axis, rules.batch_axes
     bsize = 1
     for a in baxes:

@@ -166,6 +166,11 @@ def attn_layer(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
     else:
         o = L.blocked_attention(q, k, v, causal=True)
     o = o.reshape(b, s, cfg.n_heads * cfg.head_dim_)
+    # all-gather the head-sharded output BEFORE the wo contraction: an
+    # all-gather is a bit-copy, whereas letting GSPMD run a partial dot +
+    # all-reduce over the sharded H*hd axis would re-associate the float
+    # sum and break the bitwise serving contract (DESIGN.md §11)
+    o = constrain(o, "batch")
     return x + matmul(o, p["wo"])
 
 
@@ -418,7 +423,10 @@ def _decode_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
     o = decode_attention_combined(q, k_cache, v_cache, pos - 1,
                                   window=max(0, window - 1), extra=extra,
                                   pages=pages, kv_scales=kv_scales)
-    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim_)
+    # bit-copy all-gather before the wo contraction (DESIGN.md §11; see
+    # attn_layer) — the shard_map above already returned o replicated,
+    # this pins the layout so GSPMD never re-shards into a partial dot
+    o = constrain(o.reshape(b, 1, cfg.n_heads * cfg.head_dim_), "batch")
     return (x + matmul(o, p["wo"]), k_new.transpose(0, 2, 1, 3),
             v_new.transpose(0, 2, 1, 3))
 
@@ -635,7 +643,8 @@ def _verify_attn(cfg: ArchConfig, p: Params, x: jax.Array, kind: str,
             window=max(0, window - 1), extra=extra, pages=pages,
             kv_scales=read_scales))
     o = jnp.concatenate(outs, axis=1)                         # (B,T,H,hd)
-    o = o.reshape(b, t, cfg.n_heads * cfg.head_dim_)
+    # bit-copy all-gather before wo (DESIGN.md §11; see attn_layer)
+    o = constrain(o.reshape(b, t, cfg.n_heads * cfg.head_dim_), "batch")
     return x + matmul(o, p["wo"]), k_new, v_new
 
 

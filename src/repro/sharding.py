@@ -25,7 +25,8 @@ class ShardingRules:
     """Resolves logical axis names against the active mesh's axis names."""
 
     def __init__(self, mesh, *, seq_shard_attn: bool = False,
-                 fsdp: bool = False, seq_shard_acts: bool = False):
+                 fsdp: bool = False, seq_shard_acts: bool = False,
+                 head_shard_attn: bool = False):
         self.mesh = mesh
         axis_names = mesh.axis_names
         self.batch_axes: Tuple[str, ...] = tuple(
@@ -36,7 +37,20 @@ class ShardingRules:
         # the (B,S,D) activations — and with them the per-layer remat
         # carries saved for backward — shard S over the model axis.
         self.seq_shard_acts = seq_shard_acts
+        # Tensor-parallel SERVING mode (DESIGN.md §11): attention heads
+        # shard over the model axis, everything whose partitioning would
+        # re-associate a float reduction (vocab logits, FFN contractions,
+        # sequence panels) stays replicated — the mode's contract is that
+        # served tokens are BITWISE the single-device stream.  Mutually
+        # exclusive with seq_shard_attn (the training-side SP layout).
+        self.head_shard_attn = head_shard_attn
+        assert not (head_shard_attn and seq_shard_attn), \
+            "head_shard_attn (serving TP) and seq_shard_attn (training " \
+            "SP) are mutually exclusive layouts"
         self.fsdp = fsdp
+
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.model_axis else 1
 
     # -- activation specs ------------------------------------------------------
     def act_btd(self) -> P:          # (B, S, D)
@@ -97,15 +111,36 @@ def constrain(x: jax.Array, kind: str) -> jax.Array:
         spec = (rules.act_btd_seq() if rules.seq_shard_attn
                 else rules.act_btd())
     elif kind == "attn_in":
-        spec = (rules.act_bthd_seq() if rules.seq_shard_attn
-                else rules.act_bthd_heads())
+        if rules.seq_shard_attn:
+            spec = rules.act_bthd_seq()
+        elif rules.head_shard_attn:
+            # serving TP keeps q model-REPLICATED in the jit graph: a
+            # head-sharded constraint back-propagates into the x@wq gemm
+            # and column-partitions it, which changes the backend's
+            # blocking and drifts bf16 low bits.  Heads are sliced only
+            # at the decode shard_map boundary — a bit-copy (DESIGN.md
+            # §11).
+            spec = P(rules.batch_axes, None, None, None)
+        else:
+            spec = rules.act_bthd_heads()
     elif kind == "kv":
         # KV replicated across model axis under head-sharded attention (GQA
-        # heads are few); sequence-sharded under SP attention.
-        spec = (rules.act_bthd_seq() if rules.seq_shard_attn
-                else P(rules.batch_axes, None, None, None))
+        # heads are few); sequence-sharded under SP attention.  Serving TP
+        # (head_shard_attn) also replicates: committing KH shards here
+        # column-partitions the x@wk / x@wv gemms via backward sharding
+        # propagation — measured bf16 drift in prefill logits.  The
+        # decode shard_map slices KV heads itself (DESIGN.md §11).
+        if rules.seq_shard_attn:
+            spec = rules.act_bthd_seq()
+        else:
+            spec = P(rules.batch_axes, None, None, None)
     elif kind == "logits":
-        spec = rules.logits_btv()
+        # serving TP keeps logits vocab-REPLICATED: a vocab-sharded (B,V)
+        # row would make top-p's partitioned cumsum / softmax normalizer
+        # re-associate its float sum, breaking the bitwise-token contract
+        # (DESIGN.md §11)
+        spec = (P(rules.batch_axes, None, None)
+                if rules.head_shard_attn else rules.logits_btv())
     else:
         raise ValueError(kind)
     return jax.lax.with_sharding_constraint(x, spec)

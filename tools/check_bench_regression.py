@@ -88,6 +88,18 @@ def main() -> int:
             if _is_parity(key) and bval == 1 and fd.get(key) == 0:
                 failures.append(f"{name}: parity field {key} flipped 1 -> 0")
 
+        # AXLE wire accounting is DETERMINISTIC (host-side ledger over a
+        # fixed merge structure): any drift means the sharded decode's
+        # merge count or payload model changed — that's semantic, not
+        # noise, so it's an exact-match guard.
+        bw = bd.get("wire_bytes_per_shard")
+        fw = fd.get("wire_bytes_per_shard")
+        if isinstance(bw, (int, float)) and isinstance(fw, (int, float)) \
+                and fw != bw:
+            failures.append(
+                f"{name}: wire_bytes_per_shard moved {bw} -> {fw} "
+                f"(deterministic AXLE accounting must not drift)")
+
         br, fr = bd.get("kv_bytes_reduction"), fd.get("kv_bytes_reduction")
         if isinstance(br, (int, float)) and isinstance(fr, (int, float)) \
                 and br >= KV_REDUCTION_BAR > fr:
